@@ -1,0 +1,57 @@
+"""Paper Fig 3 analogue: Graph500 BFS TEPS, EDAT vs BSP reference, over
+rank counts.  (Container has one physical core, so absolute TEPS are not
+the paper's Cray numbers; the deliverable is the EDAT-vs-reference
+comparison and the crossover trend as rank count grows.)"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.graph import (EdatBFS, ReferenceBFS, build_csr, kronecker_edges,
+                         validate_bfs_tree)
+
+
+def run(scale: int = 13, edgefactor: int = 16, ranks=(1, 2, 4, 8),
+        roots: int = 4, validate: bool = True, out: str = None):
+    edges = kronecker_edges(scale, edgefactor)
+    n = 1 << scale
+    rng = np.random.default_rng(7)
+    # sample roots with degree > 0 (graph500 rule)
+    deg = np.bincount(np.concatenate([edges[0], edges[1]]), minlength=n)
+    cand = np.where(deg > 0)[0]
+    root_set = [int(r) for r in rng.choice(cand, size=roots, replace=False)]
+
+    rows = []
+    for nr in ranks:
+        csr = build_csr(edges, n, nr)
+        for impl_name, mk in (("edat", lambda: EdatBFS(csr)),
+                              ("reference", lambda: ReferenceBFS(csr))):
+            teps_list = []
+            for root in root_set:
+                bfs = mk()
+                t0 = time.monotonic()
+                parent = bfs.run(root)
+                dt = time.monotonic() - t0
+                traversed = sum(bfs.traversed)
+                teps_list.append(traversed / max(dt, 1e-9))
+                if validate:
+                    assert validate_bfs_tree(edges, parent, root), \
+                        (impl_name, nr, root)
+            rows.append({"impl": impl_name, "ranks": nr,
+                         "teps_mean": float(np.mean(teps_list)),
+                         "teps_max": float(np.max(teps_list))})
+            print(f"  bfs scale={scale} ranks={nr:2d} {impl_name:9s} "
+                  f"TEPS={np.mean(teps_list):.3e}")
+    result = {"scale": scale, "edgefactor": edgefactor, "rows": rows}
+    if out:
+        os.makedirs(os.path.dirname(out), exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Paper Fig 5 analogue: in-situ analytics bandwidth + latency vs number
+of analytics cores, EDAT pipeline vs bespoke (MONC-style) comms stack."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.analytics import BespokeAnalytics, EdatAnalytics, InsituCfg
+
+
+def run(analytics=(1, 2, 4, 8), items: int = 64, elems: int = 1024,
+        out: str = None):
+    rows = []
+    for n in analytics:
+        cfg = InsituCfg(n_analytics=n, items_per_producer=items,
+                        field_elems=elems, n_fields=2)
+        e = EdatAnalytics(cfg).run()
+        b = BespokeAnalytics(cfg).run()
+        rows.append({"analytics_ranks": n, "edat": e, "bespoke": b})
+        print(f"  insitu n={n:2d} edat bw={e['bandwidth_items_s']:9.1f}/s "
+              f"lat={e['mean_latency_s']*1e3:7.2f}ms | bespoke "
+              f"bw={b['bandwidth_items_s']:9.1f}/s "
+              f"lat={b['mean_latency_s']*1e3:7.2f}ms")
+    result = {"items_per_producer": items, "field_elems": elems,
+              "rows": rows}
+    if out:
+        os.makedirs(os.path.dirname(out), exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+if __name__ == "__main__":
+    run()

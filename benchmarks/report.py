@@ -1,0 +1,34 @@
+"""Markdown report fragments for EXPERIMENTS.md from dry-run artifacts."""
+import glob
+import json
+import os
+import sys
+
+
+def dryrun_table(dirpath: str) -> str:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        r = json.load(open(p))
+        if r.get("variant"):
+            continue
+        a = r.get("analysis", {})
+        mem = r.get("memory", {}) or {}
+        args_gb = mem.get("argument_size_in_bytes", 0) / 1e9
+        temp_gb = mem.get("temp_size_in_bytes", 0) / 1e9
+        coll = a.get("collective_wire_total", 0)
+        cnts = a.get("collective_counts", {})
+        sched = "+".join(f"{k.replace('collective-','c')}:{int(v)}"
+                         for k, v in sorted(cnts.items()))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {'OK' if r['ok'] else 'FAIL'} "
+            f"| {r.get('compile_s','-')} | {args_gb:.2f} | {temp_gb:.2f} "
+            f"| {a.get('flops',0):.2e} | {coll:.2e} | {sched} |")
+    hdr = ("| arch | shape | compile | compile_s | args GB/dev | "
+           "temp GB/dev | FLOPs/dev | coll B/dev | collective schedule "
+           "(counts) |\n|---|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print(dryrun_table(sys.argv[1] if len(sys.argv) > 1
+                       else "experiments/dryrun/pod16x16"))

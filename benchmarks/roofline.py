@@ -1,0 +1,157 @@
+"""Roofline analysis (§Roofline): three terms per (arch x shape) from the
+dry-run's compiled artifacts.
+
+  compute term    = HLO_FLOPs / (chips * 197 TFLOP/s)     [bf16 v5e]
+  memory term     = HLO_bytes / (chips * 819 GB/s)
+  collective term = collective_bytes / (chips * 50 GB/s)  [ICI per link]
+
+All numerators come from the trip-count-aware HLO roll-up
+(repro.launch.hlo_analysis) over the SPMD-partitioned module, whose shapes
+are per-device — so numerator/chips is already applied.  MODEL_FLOPS is
+6*N*D (dense) or 6*N_active*D (MoE) with D = tokens per step; the ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy waste.  ``mfu_proxy`` =
+ideal model-flop time / dominant term — the roofline fraction we hillclimb
+in §Perf.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12       # bf16 / chip (v5e)
+HBM_BW = 819e9            # B/s / chip
+ICI_BW = 50e9             # B/s / link
+
+
+def model_flops_per_step(arch: str, shape: str) -> float:
+    """6 * N(active) * D analytic model FLOPs (global, per step)."""
+    from repro.configs import ARCHS, SHAPES
+    import jax
+    import numpy as np
+    from repro.models import build_model
+
+    spec = ARCHS[arch]
+    sh = SHAPES[shape]
+    model = build_model(spec.cfg)
+    ab = model.abstract_params()
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(ab))
+    n_active = total
+    if spec.cfg.moe is not None:
+        m = spec.cfg.moe
+        flat = jax.tree.leaves_with_path(ab)
+        routed = sum(int(np.prod(x.shape)) for p, x in flat
+                     if any(getattr(k, "key", "") in ("wg", "wu", "wd")
+                            for k in p))
+        n_active = total - routed * (1.0 - m.top_k / m.n_experts)
+    if shape.startswith("train"):
+        tokens = sh.seq * sh.global_batch
+        return 6.0 * n_active * tokens
+    if shape.startswith("prefill"):
+        tokens = sh.seq * sh.global_batch
+        return 2.0 * n_active * tokens      # forward only
+    # decode: one token per sequence
+    return 2.0 * n_active * sh.global_batch
+
+
+def _min_bytes_per_step(arch: str, shape: str, chips: int) -> float:
+    """Analytic HBM floor (per device): weights read once (+cache for
+    decode, x3 weight traffic for train: read + grad write + opt update)."""
+    from repro.configs import ARCHS, SHAPES
+    import jax
+    import numpy as np
+    from repro.models import build_model
+
+    spec = ARCHS[arch]
+    sh = SHAPES[shape]
+    model = build_model(spec.cfg)
+    ab = model.abstract_params()
+    pbytes = sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                 for x in jax.tree.leaves(ab))
+    if shape.startswith("train"):
+        return 3.0 * pbytes / chips
+    if shape.startswith("prefill"):
+        return pbytes / chips
+    cache = 0
+    try:
+        cab = model.abstract_cache(sh.global_batch, sh.seq)
+        cache = sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                    for x in jax.tree.leaves(cab))
+    except Exception:  # noqa: BLE001
+        pass
+    return (pbytes + cache) / chips
+
+
+def roofline_row(res: dict) -> Optional[dict]:
+    if not res.get("ok") or "analysis" not in res:
+        return None
+    a = res["analysis"]
+    chips = res["n_devices"]
+    compute = a["flops"] / PEAK_FLOPS                 # per-device seconds
+    # memory term: 2x outputs-only traffic (each materialised buffer is
+    # written once and read ~once by a fused consumer).  The CPU-fused
+    # operand+output sum is reported as the pessimistic upper bound.
+    mem_out = a.get("mem_bytes_out", a["mem_bytes"] / 3.0)
+    memory = 2.0 * mem_out / HBM_BW
+    memory_ub = a["mem_bytes"] / HBM_BW
+    coll = a["collective_wire_total"] / ICI_BW
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", coll), key=lambda kv: kv[1])
+    mf = model_flops_per_step(res["arch"], res["shape"])
+    hlo_global = a["flops"] * chips
+    kind = (res.get("meta") or {}).get("kind", "train")
+    ideal_c = mf / chips / PEAK_FLOPS
+    ideal_m = _min_bytes_per_step(res["arch"], res["shape"], chips) / HBM_BW
+    # the achievable floor is whichever resource the *ideal* program needs
+    # more of; the roofline fraction is floor / modelled-bound
+    ideal = max(ideal_c, ideal_m) if kind == "decode" else ideal_c
+    row = {
+        "arch": res["arch"], "shape": res["shape"], "chips": chips,
+        "kind": kind,
+        "compute_s": compute, "memory_s": memory,
+        "memory_ub_s": memory_ub, "collective_s": coll,
+        "dominant": dominant[0], "bound_s": dominant[1],
+        "model_flops": mf, "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / max(hlo_global, 1.0),
+        "ideal_s": ideal,
+        "roofline_frac": ideal / max(dominant[1], 1e-30),
+        "mem_per_dev_bytes": (res.get("memory") or {}).get(
+            "temp_size_in_bytes"),
+    }
+    return row
+
+
+def run(dryrun_dir: str = "experiments/dryrun/pod16x16",
+        out: str = "experiments/roofline_pod16x16.json",
+        quiet: bool = False):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            res = json.load(f)
+        row = roofline_row(res)
+        if row:
+            rows.append(row)
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    if not quiet:
+        hdr = (f"{'arch':22s} {'shape':11s} {'compute':>9s} {'memory':>9s} "
+               f"{'coll':>9s} {'bound':>10s} {'useful':>7s} {'RLfrac':>7s}")
+        print(hdr)
+        for r in rows:
+            print(f"{r['arch']:22s} {r['shape']:11s} "
+                  f"{r['compute_s']:9.4f} {r['memory_s']:9.4f} "
+                  f"{r['collective_s']:9.4f} {r['dominant']:>10s} "
+                  f"{r['useful_ratio']:7.3f} {r['roofline_frac']:7.3f}")
+    if out:
+        os.makedirs(os.path.dirname(out), exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun/pod16x16"
+    o = sys.argv[2] if len(sys.argv) > 2 else \
+        "experiments/roofline_pod16x16.json"
+    run(d, o)

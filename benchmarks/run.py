@@ -1,0 +1,59 @@
+"""Benchmark orchestrator: one benchmark per paper table/figure + roofline.
+
+  python -m benchmarks.run            # small defaults (CI-sized)
+  python -m benchmarks.run --full     # paper-shaped sweeps (slow on 1 core)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--outdir", default="experiments/bench")
+    args = ap.parse_args(argv)
+    os.makedirs(args.outdir, exist_ok=True)
+
+    print("== runtime micro-overheads (paper §V overhead discussion) ==")
+    from benchmarks import runtime_micro
+    runtime_micro.run(out=os.path.join(args.outdir, "runtime_micro.json"))
+
+    print("== Graph500 BFS: EDAT vs BSP reference (paper Fig 3) ==")
+    from benchmarks import bfs_scaling
+    if args.full:
+        bfs_scaling.run(scale=16, ranks=(1, 2, 4, 8, 16), roots=8,
+                        out=os.path.join(args.outdir, "bfs.json"))
+    else:
+        bfs_scaling.run(scale=12, ranks=(1, 2, 4), roots=2,
+                        out=os.path.join(args.outdir, "bfs.json"))
+
+    print("== In-situ analytics: EDAT vs bespoke (paper Fig 5) ==")
+    from benchmarks import insitu
+    if args.full:
+        insitu.run(analytics=(1, 2, 4, 8, 16), items=128,
+                   out=os.path.join(args.outdir, "insitu.json"))
+    else:
+        insitu.run(analytics=(1, 2, 4), items=32,
+                   out=os.path.join(args.outdir, "insitu.json"))
+
+    print("== roofline (from dry-run artifacts, if present) ==")
+    from benchmarks import roofline
+    for mesh in ("pod16x16", "pod2x16x16"):
+        d = os.path.join("experiments", "dryrun", mesh)
+        if os.path.isdir(d) and os.listdir(d):
+            print(f"-- mesh {mesh} --")
+            roofline.run(d, os.path.join("experiments",
+                                         f"roofline_{mesh}.json"))
+        else:
+            print(f"-- mesh {mesh}: no dry-run artifacts; run "
+                  f"`python -m repro.launch.dryrun --all` first --")
+    print("benchmarks complete; json in", args.outdir)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

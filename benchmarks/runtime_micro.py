@@ -1,0 +1,99 @@
+"""Runtime micro-overheads (paper §V: "some additional overhead associated
+with the scheduling of tasks and managing of dependencies"):
+
+  * task throughput: zero-dependency tasks/second;
+  * event throughput: rank-to-rank small-event rate;
+  * event latency: ping-pong round-trip / 2;
+  * persistent-task dispatch rate;
+  * progress-mode comparison (dedicated thread vs idle-worker polling).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro import edat
+
+
+def _tasks_per_s(n_tasks=2000, workers=2):
+    done = []
+
+    def t(ctx, events):
+        done.append(None)
+
+    def main(ctx):
+        for _ in range(n_tasks):
+            ctx.submit(t)
+
+    rt = edat.Runtime(1, workers_per_rank=workers)
+    t0 = time.monotonic()
+    rt.run(main, timeout=120)
+    dt = time.monotonic() - t0
+    assert len(done) == n_tasks
+    return n_tasks / dt
+
+
+def _events_per_s(n_events=2000, progress="thread"):
+    got = []
+
+    def sink(ctx, events):
+        got.append(None)
+
+    def main(ctx):
+        if ctx.rank == 0:
+            ctx.submit_persistent(sink, deps=[(1, "e")])
+        else:
+            for i in range(n_events):
+                ctx.fire(0, "e", i)
+
+    rt = edat.Runtime(2, workers_per_rank=1, progress=progress)
+    t0 = time.monotonic()
+    rt.run(main, timeout=120)
+    dt = time.monotonic() - t0
+    assert len(got) == n_events
+    return n_events / dt
+
+
+def _pingpong_latency(n_iters=500):
+    t_hist = []
+
+    def ping(ctx, events):
+        if events[0].data < n_iters:
+            ctx.fire(1, "ping", events[0].data + 1)
+
+    def pong(ctx, events):
+        ctx.fire(0, "pong", events[0].data)
+
+    def main(ctx):
+        if ctx.rank == 0:
+            ctx.submit_persistent(ping, deps=[(1, "pong")])
+            ctx.fire(1, "ping", 0)
+        else:
+            ctx.submit_persistent(pong, deps=[(0, "ping")])
+
+    rt = edat.Runtime(2, workers_per_rank=1, unconsumed="ignore")
+    t0 = time.monotonic()
+    rt.run(main, timeout=120)
+    dt = time.monotonic() - t0
+    return dt / (2 * n_iters)   # one-way latency
+
+
+def run(out: str = None):
+    res = {
+        "tasks_per_s": _tasks_per_s(),
+        "events_per_s_thread": _events_per_s(progress="thread"),
+        "events_per_s_workerpoll": _events_per_s(progress="worker"),
+        "event_latency_us": _pingpong_latency() * 1e6,
+    }
+    for k, v in res.items():
+        print(f"  micro {k} = {v:.1f}")
+    if out:
+        os.makedirs(os.path.dirname(out), exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(res, f, indent=1)
+    return res
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Quickstart: the paper's Listing 4 example, in EDAT-JAX.
+
+Two ranks; task1 (rank 0) fires two events; task2 (rank 1) fires a third;
+task3 (rank 1) consumes one event from each and prints the sum.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro import edat
+
+
+def task1(ctx, events):
+    ctx.fire(1, "event1")                 # no payload (EDAT_NONE)
+    ctx.fire(1, "event2", 33)             # one integer payload
+
+
+def task2(ctx, events):
+    ctx.fire(edat.SELF, "event3", 100)    # EDAT_SELF target
+
+
+def task3(ctx, events):
+    print(f"task3 on rank {ctx.rank}: "
+          f"{events[0].data} + {events[1].data} = "
+          f"{events[0].data + events[1].data}")
+
+
+def main(ctx):
+    if ctx.rank == 0:
+        ctx.submit(task1)                                  # no dependencies
+    elif ctx.rank == 1:
+        ctx.submit(task2, deps=[(0, "event1")])
+        ctx.submit(task3, deps=[(0, "event2"), (1, "event3")])
+
+
+if __name__ == "__main__":
+    rt = edat.Runtime(n_ranks=2, workers_per_rank=2)
+    stats = rt.run(main)
+    print(f"terminated cleanly: {stats}")

@@ -1,0 +1,111 @@
+"""End-to-end driver: event-driven fault-tolerant LM training.
+
+Every assigned architecture is selectable via --arch (reduced to a
+CPU-trainable size with --preset small, or near-100M with --preset 100m).
+The trainer is the EDAT-coordinated one: gradient events (sync or K-of-N
+quorum), async checkpoint events, in-situ metric events, failure recovery.
+
+  PYTHONPATH=src python examples/train_lm.py --arch gemma2-2b --steps 50
+  PYTHONPATH=src python examples/train_lm.py --arch mamba2-370m \
+      --preset 100m --steps 300 --ranks 2 --ckpt-dir /tmp/ck
+  PYTHONPATH=src python examples/train_lm.py --arch stablelm-1.6b \
+      --kill-rank 1 --ranks 3 --ckpt-dir /tmp/ck   # failure recovery demo
+"""
+import argparse
+import threading
+import time
+
+import numpy as np
+
+from repro.configs import ARCHS, reduce_cfg
+from repro.data import DataCfg
+from repro.models import build_model
+from repro.optim import OptCfg
+from repro.runtime_dist import EventDrivenTrainer, TrainerCfg
+
+
+def preset_cfg(arch: str, preset: str):
+    cfg = reduce_cfg(ARCHS[arch].cfg)
+    if preset == "100m":
+        # ~100M params, CPU-runnable shapes (a few hundred steps feasible)
+        cfg = cfg.replace(n_layers=max(cfg.n_layers, 8), d_model=512,
+                          n_heads=8, head_dim=64,
+                          d_ff=0 if cfg.mlp == "none" else 2048,
+                          vocab=32768)
+    return cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b", choices=sorted(ARCHS))
+    ap.add_argument("--preset", default="small", choices=["small", "100m"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--ranks", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--quorum", type=float, default=1.0)
+    ap.add_argument("--compress", default="none", choices=["none", "int8"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--kill-rank", type=int, default=None,
+                    help="simulate node failure of this rank mid-run")
+    args = ap.parse_args()
+
+    cfg = preset_cfg(args.arch, args.preset)
+    if cfg.encdec or cfg.frontend != "none":
+        cfg = cfg.replace(frontend="none", n_frontend_tokens=0)
+        if cfg.encdec:
+            print("note: enc-dec arch trained decoder-style on synthetic "
+                  "frames is not supported by this driver; using the "
+                  "decoder-only backbone")
+            cfg = cfg.replace(encdec=False)
+    model = build_model(cfg)
+    import jax
+    n_params = sum(int(np.prod(x.shape))
+                   for x in jax.tree.leaves(model.abstract_params()))
+    print(f"arch={args.arch} preset={args.preset}: {n_params/1e6:.1f}M "
+          f"params, {args.ranks} ranks, {args.steps} steps")
+
+    data = DataCfg(vocab=cfg.vocab, seq=args.seq,
+                   global_batch=args.batch * args.ranks)
+    opt = OptCfg(name="adamw", peak_lr=args.lr, warmup=10,
+                 total_steps=max(args.steps, 100))
+    start = 0
+    if args.resume and args.ckpt_dir:
+        from repro.checkpoint import latest_step
+        start = latest_step(args.ckpt_dir) or 0
+        print(f"resuming from step {start}")
+    tc = TrainerCfg(steps=args.steps, n_ranks=args.ranks,
+                    quorum=args.quorum, compress=args.compress,
+                    ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                    start_step=start, collect_timeout=5.0)
+    trainer = EventDrivenTrainer(model, data, opt, tc)
+
+    if args.kill_rank is not None:
+        def killer():
+            time.sleep(3.0)
+            print(f"!! injecting failure of rank {args.kill_rank}")
+            trainer.runtime.kill_rank(args.kill_rank)
+        threading.Thread(target=killer, daemon=True).start()
+
+    t0 = time.monotonic()
+    out = trainer.run(timeout=3600)
+    dt = time.monotonic() - t0
+    hist = out["history"]
+    tokens = args.batch * args.ranks * args.seq * args.steps
+    print(f"trained {args.steps} steps in {dt:.1f}s "
+          f"({tokens / dt:.0f} tok/s); stale grads used: "
+          f"{out['stale_used']}; ckpt writes: {out['ckpt_writes']}")
+    for m in hist[:: max(1, len(hist) // 12)]:
+        print(f"  step {m['step']:4d} rank{m['rank']} "
+              f"loss {m['loss']:.4f} grads {m['n_grads']}")
+    if hist:
+        early = np.mean([m["loss"] for m in hist[:4]])
+        late = np.mean([m["loss"] for m in hist[-4:]])
+        print(f"loss: {early:.4f} -> {late:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: EDAT-JAX — event-driven asynchronous tasks for multi-pod JAX."""
+__version__ = "1.0.0"

@@ -1,0 +1,1 @@
+from .insitu import InsituCfg, EdatAnalytics, BespokeAnalytics

@@ -1,0 +1,226 @@
+"""MONC-style in-situ data analytics (paper §VI, Figs 4-5).
+
+Computational ranks saturate their analytics rank with raw ``field``
+events; analytics ranks run the paper's pipeline as EDAT tasks:
+
+  * a persistent *registration* task — a computational core registers, and
+    per-core handler + deregistration tasks are submitted (paper Fig 4);
+  * per-field persistent handler tasks that process raw data (arithmetic)
+    and contribute to an inter-analytics reduction via events;
+  * the reduction root is distributed round-robin over analytics ranks per
+    (field, timestep) — the paper's explanation for bandwidth levelling
+    off rather than degrading;
+  * a persistent *writer federator* task on the root consumes the reduced
+    value ("writes" it) and records the end-to-end latency.
+
+The baseline (``BespokeAnalytics``) mimics the original MONC comms stack:
+a single handler thread pool per rank with one coarse global lock
+protecting shared state, synchronous reductions through a shared
+structure, and explicit memory-cleaning passes that lock out progress —
+the design the paper replaced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro import edat
+
+
+@dataclasses.dataclass
+class InsituCfg:
+    n_analytics: int = 2
+    items_per_producer: int = 50
+    field_elems: int = 512       # elements per raw data item
+    n_fields: int = 2
+
+
+def _analyse(x: np.ndarray) -> np.ndarray:
+    """The per-item arithmetic of the paper's tests (ops + local reduce)."""
+    return np.array([x.sum(), (x * x).sum(), x.min(), x.max()])
+
+
+# ------------------------------------------------------------------- EDAT
+class EdatAnalytics:
+    """1:1 computational:analytics ranks (paper's benchmark setup):
+    ranks [0, n) are analytics, ranks [n, 2n) are computational."""
+
+    def __init__(self, cfg: InsituCfg, workers_per_rank: int = 4):
+        self.cfg = cfg
+        self.workers = workers_per_rank
+        self.results: List[tuple] = []
+        self._mu = threading.Lock()
+        self.t0 = 0.0
+
+    def run(self) -> Dict[str, float]:
+        cfg = self.cfg
+        n = cfg.n_analytics
+        rt = edat.Runtime(2 * n, workers_per_rank=self.workers,
+                          unconsumed="error")
+        self.t0 = time.monotonic()
+        rt.run(self._main, timeout=600)
+        dt = time.monotonic() - self.t0
+        raw = cfg.n_analytics * cfg.items_per_producer
+        lat = np.mean([r[1] for r in self.results]) if self.results else 0
+        return {"raw_items": raw, "results": len(self.results),
+                "seconds": dt, "bandwidth_items_s": raw / max(dt, 1e-9),
+                "mean_latency_s": float(lat)}
+
+    def _main(self, ctx: edat.Context):
+        cfg = self.cfg
+        n = cfg.n_analytics
+        if ctx.rank < n:
+            self._analytics_main(ctx)
+        else:
+            self._producer_main(ctx)
+
+    # -- analytics side -------------------------------------------------------
+    def _analytics_main(self, ctx: edat.Context):
+        cfg = self.cfg
+        n = cfg.n_analytics
+
+        def on_register(ctx2, events):
+            core = events[0].data
+            # per-core handler + deregistration tasks (paper Fig 4)
+            ctx2.submit_persistent(on_field, deps=[(core, "field")],
+                                   name=f"handler.{core}")
+            ctx2.submit(on_deregister, deps=[(core, "dereg")])
+
+        def on_field(ctx2, events):
+            item = events[0].data
+            partial = _analyse(item["data"])
+            # events are tagged with field+timestep (paper: "data is sent
+            # tagged with the timestep and field name"); the reduction root
+            # is distributed round-robin over analytics ranks
+            root = (item["fid"] + item["ts"]) % n
+            eid = f"partial.{item['fid']}.{item['ts']}"
+            ctx2.fire(root if root != ctx2.rank else edat.SELF, eid,
+                      {"t_fire": item["t_fire"], "partial": partial})
+
+        def on_partial(ctx2, events):
+            # reduction across analytics ranks: ALL-sourced dependency on
+            # this (field, timestep)'s tagged events
+            datas = [e.data for e in events]
+            total = np.sum([d["partial"] for d in datas], axis=0)
+            t_fire = min(d["t_fire"] for d in datas)
+            with self._mu:
+                self.results.append((total, time.monotonic() - t_fire))
+
+        def on_deregister(ctx2, events):
+            ctx2.remove_task(f"handler.{events[0].data}")
+
+        ctx.submit_persistent(on_register, deps=[(edat.ANY, "register")],
+                              name="registration")
+        # writer federator: one task per (field, timestep) this rank roots.
+        # Dependencies name the n analytics ranks explicitly (EDAT_ALL would
+        # also include the computational ranks).
+        assert cfg.items_per_producer % cfg.n_fields == 0
+        per_field = cfg.items_per_producer // cfg.n_fields
+        for fid in range(cfg.n_fields):
+            for ts in range(per_field):
+                if (fid + ts) % n == ctx.rank:
+                    ctx.submit(on_partial,
+                               deps=[(r, f"partial.{fid}.{ts}")
+                                     for r in range(n)])
+
+    # -- computational side -----------------------------------------------------
+    def _producer_main(self, ctx: edat.Context):
+        cfg = self.cfg
+        n = cfg.n_analytics
+        target = ctx.rank - n          # my analytics core
+        ctx.fire(target, "register", ctx.rank)
+        rng = np.random.default_rng(ctx.rank)
+        for i in range(cfg.items_per_producer):
+            fid = i % cfg.n_fields
+            data = rng.standard_normal(cfg.field_elems)
+            ctx.fire(target, "field",
+                     {"fid": fid, "ts": i // cfg.n_fields, "data": data,
+                      "t_fire": time.monotonic()})
+        ctx.fire(target, "dereg", ctx.rank)
+
+
+# ---------------------------------------------------------------- baseline
+class BespokeAnalytics:
+    """MONC's original design, faithfully bad: coarse global lock, threads
+    signalling through shared state, synchronous reduction, periodic
+    memory-cleaning that blocks all handlers (paper §VI)."""
+
+    def __init__(self, cfg: InsituCfg, threads_per_rank: int = 4):
+        self.cfg = cfg
+        self.nthreads = threads_per_rank
+        self.results: List[tuple] = []
+
+    def run(self) -> Dict[str, float]:
+        cfg = self.cfg
+        n = cfg.n_analytics
+        glock = threading.Lock()                  # the coarse lock
+        pending: Dict[tuple, list] = {}           # (fid, ts) -> partials
+        queues = [[] for _ in range(n)]
+        qcv = [threading.Condition() for _ in range(n)]
+        stop = [False]
+        processed = [0]
+
+        t0 = time.monotonic()
+
+        def producer(rank):
+            rng = np.random.default_rng(rank + 1000)
+            for i in range(cfg.items_per_producer):
+                item = {"fid": i % cfg.n_fields, "ts": i // cfg.n_fields,
+                        "data": rng.standard_normal(cfg.field_elems),
+                        "t_fire": time.monotonic()}
+                with qcv[rank]:
+                    queues[rank].append(item)
+                    qcv[rank].notify()
+
+        def handler(rank, tid):
+            clean_counter = 0
+            while True:
+                with qcv[rank]:
+                    if not queues[rank]:
+                        if stop[0]:
+                            return
+                        qcv[rank].wait(0.01)
+                        continue
+                    item = queues[rank].pop(0)
+                partial = _analyse(item["data"])
+                key = (item["fid"], item["ts"])
+                with glock:                       # all state under one lock
+                    lst = pending.setdefault(key, [])
+                    lst.append((partial, item["t_fire"]))
+                    if len(lst) == n:
+                        total = np.sum([p for p, _ in lst], axis=0)
+                        t_fire = min(t for _, t in lst)
+                        self.results.append(
+                            (total, time.monotonic() - t_fire))
+                        del pending[key]
+                    processed[0] += 1
+                    clean_counter += 1
+                    if clean_counter % 16 == 0:
+                        # "memory cleaning" pass: holds the global lock
+                        time.sleep(0.0005)
+                        _ = {k: len(v) for k, v in pending.items()}
+
+        producers = [threading.Thread(target=producer, args=(r,))
+                     for r in range(n)]
+        handlers = [threading.Thread(target=handler, args=(r, t))
+                    for r in range(n) for t in range(self.nthreads)]
+        for t in handlers + producers:
+            t.start()
+        for t in producers:
+            t.join()
+        total_items = n * cfg.items_per_producer
+        while processed[0] < total_items:
+            time.sleep(0.005)
+        stop[0] = True
+        for t in handlers:
+            t.join()
+        dt = time.monotonic() - t0
+        lat = np.mean([r[1] for r in self.results]) if self.results else 0
+        return {"raw_items": total_items, "results": len(self.results),
+                "seconds": dt,
+                "bandwidth_items_s": total_items / max(dt, 1e-9),
+                "mean_latency_s": float(lat)}

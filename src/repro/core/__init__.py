@@ -1,0 +1,27 @@
+"""EDAT core: event-driven asynchronous tasks (Brown, Brown & Bull, 2020).
+
+Public API::
+
+    from repro import edat          # or: from repro.core import *
+
+    rt = edat.Runtime(n_ranks=2, workers_per_rank=2)
+
+    def main(ctx):
+        if ctx.rank == 0:
+            ctx.submit(task1)                       # no dependencies
+        else:
+            ctx.submit(task2, deps=[(0, "event1")])
+
+    rt.run(main)
+"""
+from .event import ALL, ANY, SELF, RANK_FAILED, Dep, Event, dep
+from .runtime import (Context, EdatDeadlockError, EdatTaskError, Runtime,
+                      TimerHandle)
+from .scheduler import Scheduler
+from .transport import InProcTransport, Message, Transport
+
+__all__ = [
+    "ALL", "ANY", "SELF", "RANK_FAILED", "Dep", "Event", "dep",
+    "Context", "Runtime", "EdatDeadlockError", "EdatTaskError", "TimerHandle",
+    "Scheduler", "InProcTransport", "Message", "Transport",
+]

@@ -1,0 +1,429 @@
+"""EDAT runtime: ranks, progress, distributed termination, timers, failures.
+
+``Runtime`` plays the role of the paper's library init/finalise pair
+(§II, §II.E): it spawns one SPMD main thread per rank, runs progress (a
+dedicated progress thread per rank, or idle-worker polling — both modes of
+paper §II.F), and detects global termination with a Mattern-style
+four-counter quiescence check driven through the transport itself.
+
+Beyond-paper (but anticipated in the paper's §VII "further work"): machine
+generated events — timer events (``fire_after``) and rank-failure events
+(``RANK_FAILED``) — and node-failure injection used by the fault-tolerant
+trainer built on top.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+from .event import (ALL, ANY, SELF, RANK_FAILED, SYS_PREFIX, TIMER_CANCELLED,
+                    Dep, Event, copy_payload)
+from .scheduler import Scheduler
+from .transport import CONTROL, EVENT, InProcTransport, Message, Transport
+
+DepLike = Union[Dep, Tuple[Any, str]]
+
+
+class EdatDeadlockError(RuntimeError):
+    """Raised when the system is quiescent but the paper's termination
+    conditions (§II.E) cannot be met: a transitory task has unmet
+    dependencies, a task is parked forever, or transitory events remain
+    unconsumed.  (The paper's library would hang; we diagnose.)"""
+
+
+class EdatTaskError(RuntimeError):
+    """A task raised; re-raised from :meth:`Runtime.run`."""
+
+
+class TimerHandle:
+    def __init__(self, runtime: "Runtime", tid: int):
+        self._rt = runtime
+        self.tid = tid
+
+    def cancel(self) -> bool:
+        return self._rt._cancel_timer(self.tid)
+
+
+class Context:
+    """Per-rank public API — mirrors the paper's C API Pythonically.
+
+    ===========================  =======================================
+    paper                        here
+    ===========================  =======================================
+    ``edatGetRank``              ``ctx.rank``
+    ``edatSubmitTask``           ``ctx.submit(fn, deps)``
+    ``edatSubmitPersistentTask`` ``ctx.submit_persistent(fn, deps)``
+    ``edatFireEvent``            ``ctx.fire(target, eid, data)``
+    ``edatFirePersistentEvent``  ``ctx.fire(..., persistent=True)``
+    ``edatWait``                 ``ctx.wait(deps)``
+    ``edatRetrieveAny``          ``ctx.retrieve_any(deps)``
+    ``edatLock/Unlock/TestLock`` ``ctx.lock / ctx.unlock / ctx.test_lock``
+    ``EDAT_SELF/ANY/ALL``        ``edat.SELF / edat.ANY / edat.ALL``
+    ``EDAT_ADDRESS``             ``ctx.fire(..., ref=True)``
+    ===========================  =======================================
+    """
+
+    def __init__(self, runtime: "Runtime", rank: int):
+        self._rt = runtime
+        self.rank = rank
+        self.n_ranks = runtime.n_ranks
+
+    # -- tasks ---------------------------------------------------------------
+    def submit(self, fn: Callable, deps: Sequence[DepLike] = (),
+               name: Optional[str] = None) -> None:
+        self._rt._sched[self.rank].submit(fn, _deps(deps), name, False)
+
+    def submit_persistent(self, fn: Callable, deps: Sequence[DepLike],
+                          name: Optional[str] = None) -> None:
+        d = _deps(deps)
+        if not d:
+            raise ValueError("a persistent task needs >= 1 dependency")
+        self._rt._sched[self.rank].submit(fn, d, name, True)
+
+    def remove_task(self, name: str) -> bool:
+        return self._rt._sched[self.rank].remove_task(name)
+
+    # -- events --------------------------------------------------------------
+    def fire(self, target: Any, eid: str, data: Any = None, *,
+             persistent: bool = False, ref: bool = False) -> None:
+        if eid.startswith(SYS_PREFIX):
+            raise ValueError(f"EIDs starting with {SYS_PREFIX!r} are reserved")
+        self._rt._fire(self.rank, target, eid, data,
+                       persistent=persistent, ref=ref)
+
+    def fire_after(self, delay: float, target: Any, eid: str,
+                   data: Any = None) -> TimerHandle:
+        """Machine-generated timer event (paper §VII further work)."""
+        return self._rt._fire_after(self.rank, delay, target, eid, data)
+
+    # -- pause / poll ----------------------------------------------------------
+    def wait(self, deps: Sequence[DepLike]) -> List[Event]:
+        return self._rt._sched[self.rank].wait(_deps(deps))
+
+    def retrieve_any(self, deps: Sequence[DepLike]) -> List[Event]:
+        return self._rt._sched[self.rank].retrieve_any(_deps(deps))
+
+    # -- locks -----------------------------------------------------------------
+    def lock(self, name: str) -> None:
+        self._rt._sched[self.rank].lock(name)
+
+    def unlock(self, name: str) -> None:
+        self._rt._sched[self.rank].unlock(name)
+
+    def test_lock(self, name: str) -> bool:
+        return self._rt._sched[self.rank].test_lock(name)
+
+    # -- info -------------------------------------------------------------------
+    def alive_ranks(self) -> List[int]:
+        return [r for r in range(self.n_ranks) if not self._rt.is_dead(r)]
+
+
+def _deps(deps: Sequence[DepLike]) -> List[Dep]:
+    out = []
+    for d in deps:
+        out.append(d if isinstance(d, Dep) else Dep(d[0], d[1]))
+    return out
+
+
+class Runtime:
+    """An EDAT 'machine': ``n_ranks`` SPMD ranks over a pluggable transport.
+
+    ``progress='thread'`` gives each rank a dedicated progress thread;
+    ``progress='worker'`` maps progress polling onto idle workers — the two
+    modes of paper §II.F.
+    """
+
+    def __init__(self, n_ranks: int, workers_per_rank: int = 1, *,
+                 progress: str = "thread",
+                 unconsumed: str = "error",
+                 transport: Optional[Transport] = None,
+                 poll_interval: float = 0.002):
+        assert progress in ("thread", "worker")
+        assert unconsumed in ("error", "warn", "ignore")
+        self.n_ranks = n_ranks
+        self.transport: InProcTransport = transport or InProcTransport(n_ranks)
+        self._sched = [Scheduler(r, n_ranks, self, workers_per_rank, progress)
+                       for r in range(n_ranks)]
+        self._ctxs = [Context(self, r) for r in range(n_ranks)]
+        self._progress_mode = progress
+        self._unconsumed = unconsumed
+        self._poll_interval = poll_interval
+        self._prog_threads: List[threading.Thread] = []
+        self._main_threads: List[threading.Thread] = []
+        self._shutdown = False
+        self._error: Optional[BaseException] = None
+        self._err_mu = threading.Lock()
+        # timers
+        self._timers: List[Tuple[float, int, int, int, str, Any]] = []
+        self._timer_ids = itertools.count()
+        self._cancelled: set = set()
+        self._timer_cv = threading.Condition()
+        self._timer_thread: Optional[threading.Thread] = None
+        self._pending_timers = 0
+        self.stats: Dict[str, Any] = {}
+
+    # ------------------------------------------------------------ event path
+    def _fire(self, src: int, target: Any, eid: str, data: Any, *,
+              persistent: bool, ref: bool) -> None:
+        payload = data if ref else copy_payload(data)
+        if target is ALL:
+            targets = list(range(self.n_ranks))
+        elif target is SELF:
+            targets = [src]
+        else:
+            targets = [int(target)]
+        sch = self._sched[src]
+        for t in targets:
+            ev = Event(data=payload if (ref or len(targets) == 1)
+                       else copy_payload(payload),
+                       source=src, eid=eid, persistent=persistent)
+            with sch._mu:
+                sch.sent += 1
+            # a send to a dead destination is counted by the transport as
+            # dropped; termination balances sent == received + dropped
+            self.transport.send(Message(EVENT, src, t, ev))
+
+    def _refire_local(self, rank: int, ev: Event) -> None:
+        """Persistent event consumed -> re-fired locally (paper §IV.A)."""
+        sch = self._sched[rank]
+        sch.sent += 1  # caller holds sch._mu
+        self.transport.send(Message(EVENT, rank, rank, ev.clone()))
+
+    # system events bypass Context validation
+    def _fire_sys(self, src: int, target: int, eid: str, data: Any) -> None:
+        sch = self._sched[src]
+        ev = Event(data=copy_payload(data), source=src, eid=eid)
+        with sch._mu:
+            sch.sent += 1
+        self.transport.send(Message(EVENT, src, target, ev))
+
+    # ------------------------------------------------------------- progress
+    def _progress_loop(self, rank: int) -> None:
+        while not self._shutdown and not self.transport.is_dead(rank):
+            msg = self.transport.recv(rank, timeout=0.1)
+            if msg is not None:
+                self._handle(rank, msg)
+
+    def _progress_poll(self, rank: int) -> bool:
+        """One poll step for idle-worker progress mode.  True if progressed."""
+        msg = self.transport.try_recv(rank)
+        if msg is None:
+            return False
+        self._handle(rank, msg)
+        return True
+
+    def _handle(self, rank: int, msg: Message) -> None:
+        if msg.kind == EVENT:
+            self._sched[rank].deliver(msg.payload)
+        elif msg.kind == CONTROL:
+            tag, data = msg.payload
+            if tag == "status?":
+                st = self._sched[rank].status()
+                st["rank"] = rank
+                self._status_replies.append(st)
+                with self._status_cv:
+                    self._status_cv.notify_all()
+
+    # --------------------------------------------------------------- timers
+    def _fire_after(self, src: int, delay: float, target: Any, eid: str,
+                    data: Any) -> TimerHandle:
+        tid = next(self._timer_ids)
+        payload = copy_payload(data)
+        with self._timer_cv:
+            heapq.heappush(self._timers,
+                           (time.monotonic() + delay, tid, src,
+                            self.n_ranks if target is ALL else (
+                                src if target is SELF else int(target)),
+                            eid, payload))
+            self._pending_timers += 1
+            self._timer_cv.notify_all()
+        return TimerHandle(self, tid)
+
+    def _cancel_timer(self, tid: int) -> bool:
+        with self._timer_cv:
+            self._cancelled.add(tid)
+            self._timer_cv.notify_all()
+        return True
+
+    def _timer_loop(self) -> None:
+        while not self._shutdown:
+            with self._timer_cv:
+                if not self._timers:
+                    self._timer_cv.wait(0.05)
+                    continue
+                when, tid, src, dst, eid, data = self._timers[0]
+                now = time.monotonic()
+                if tid in self._cancelled:
+                    heapq.heappop(self._timers)
+                    self._cancelled.discard(tid)
+                    self._pending_timers -= 1
+                    continue
+                if when > now:
+                    self._timer_cv.wait(min(when - now, 0.05))
+                    continue
+                heapq.heappop(self._timers)
+                self._pending_timers -= 1
+            if dst == self.n_ranks:  # ALL
+                for t in range(self.n_ranks):
+                    self._fire_sys(src, t, eid, data)
+            else:
+                self._fire_sys(src, dst, eid, data)
+
+    # ---------------------------------------------------- failure injection
+    def kill_rank(self, rank: int) -> None:
+        """Simulate node failure: drop the rank and notify survivors with a
+        machine-generated RANK_FAILED event (paper §VII further work)."""
+        self.transport.mark_dead(rank)
+        self._sched[rank].stop()
+        # the failure notification is machine-generated at each *survivor*
+        # (the dead rank cannot send), sourced from the survivor itself
+        for r in range(self.n_ranks):
+            if r != rank and not self.transport.is_dead(r):
+                self._fire_sys(r, r, RANK_FAILED, rank)
+
+    def is_dead(self, rank: int) -> bool:
+        return self.transport.is_dead(rank)
+
+    # -------------------------------------------------------------- failure
+    def _task_failed(self, rank: int, inst, exc: BaseException) -> None:
+        with self._err_mu:
+            if self._error is None:
+                self._error = EdatTaskError(
+                    f"task {inst.name or inst.fn.__name__!r} on rank {rank} "
+                    f"raised {type(exc).__name__}: {exc}")
+                self._error.__cause__ = exc
+
+    def _ctx(self, rank: int) -> Context:
+        return self._ctxs[rank]
+
+    # ------------------------------------------------------------------ run
+    def run(self, main: Callable[[Context], None],
+            timeout: float = 120.0) -> Dict[str, Any]:
+        """Run ``main(ctx)`` SPMD on every rank; return when the paper's four
+        termination conditions (§II.E) hold globally.  Equivalent to
+        ``edatInit(); main(); edatFinalise()``."""
+        self._status_replies: List[dict] = []
+        self._status_cv = threading.Condition()
+
+        for s in self._sched:
+            s.start()
+        if self._progress_mode == "thread":
+            for r in range(self.n_ranks):
+                t = threading.Thread(target=self._progress_loop, args=(r,),
+                                     daemon=True, name=f"edat-p{r}")
+                self._prog_threads.append(t)
+                t.start()
+        self._timer_thread = threading.Thread(target=self._timer_loop,
+                                              daemon=True, name="edat-timer")
+        self._timer_thread.start()
+
+        def _main(rank: int):
+            try:
+                main(self._ctxs[rank])
+            except Exception as e:  # noqa: BLE001
+                self._task_failed(rank, type("M", (), {
+                    "name": f"main[{rank}]", "fn": main})(), e)
+            finally:
+                self._sched[rank].set_main_done()
+
+        for r in range(self.n_ranks):
+            t = threading.Thread(target=_main, args=(r,), daemon=True,
+                                 name=f"edat-main{r}")
+            self._main_threads.append(t)
+            t.start()
+
+        try:
+            self._await_termination(timeout)
+        finally:
+            self._shutdown = True
+            for s in self._sched:
+                s.stop()
+            for r in range(self.n_ranks):
+                self.transport.wake(r)
+            for t in self._main_threads:
+                t.join(5.0)
+            for s in self._sched:
+                s.join()
+        if self._error is not None:
+            raise self._error
+        return self.stats
+
+    # ------------------------------------------------- termination detector
+    def _poll_status(self) -> List[dict]:
+        alive = [r for r in range(self.n_ranks) if not self.is_dead(r)]
+        self._status_replies = []
+        if self._progress_mode == "thread":
+            for r in alive:
+                self.transport.send(Message(CONTROL, -1, r, ("status?", None)))
+            deadline = time.monotonic() + 1.0
+            with self._status_cv:
+                while (len(self._status_replies) < len(alive)
+                       and time.monotonic() < deadline):
+                    self._status_cv.wait(0.05)
+            return list(self._status_replies)
+        # worker-poll mode: workers may all be busy; read directly (in-proc
+        # shortcut is safe here because status() takes the scheduler lock)
+        return [dict(self._sched[r].status(), rank=r) for r in alive]
+
+    def _await_termination(self, timeout: float) -> None:
+        """Mattern four-counter quiescence: two consecutive stable polls with
+        every rank idle and globally sent == received."""
+        t0 = time.monotonic()
+        prev: Optional[Tuple[int, int]] = None
+        while True:
+            if self._error is not None:
+                return
+            if time.monotonic() - t0 > timeout:
+                raise TimeoutError(
+                    f"EDAT did not terminate within {timeout}s; "
+                    f"status={self._poll_status()}")
+            sts = self._poll_status()
+            alive = [r for r in range(self.n_ranks) if not self.is_dead(r)]
+            if len(sts) < len(alive):
+                prev = None
+                continue
+            with self._timer_cv:
+                timers = self._pending_timers
+            mailbox = sum(self.transport.pending(r) for r in alive)
+            s = sum(x["sent"] for x in sts)
+            rcv = sum(x["received"] for x in sts)
+            # dead ranks: include their final counter snapshots so events
+            # they exchanged before failing stay balanced
+            for r in range(self.n_ranks):
+                if self.is_dead(r):
+                    s += self._sched[r].sent
+                    rcv += self._sched[r].received
+            rcv += self.transport.dropped
+            all_idle = all(x["idle"] for x in sts) and mailbox == 0 and timers == 0
+            if not all_idle or s != rcv:
+                prev = None
+                time.sleep(self._poll_interval)
+                continue
+            if prev == (s, rcv):
+                # two consecutive stable, idle, balanced polls -> quiescent
+                parked = sum(x["parked"] for x in sts)
+                unmet = sum(x["unmet"] for x in sts)
+                stored = sum(x["stored"] for x in sts)
+                self.stats.update(
+                    events_sent=s, events_received=rcv,
+                    tasks_executed=sum(x["executed"] for x in sts),
+                    events_dropped=self.transport.dropped,
+                    unconsumed_events=stored)
+                if parked or unmet:
+                    raise EdatDeadlockError(
+                        f"quiescent with {parked} parked task(s) and {unmet} "
+                        f"transitory task(s) with unmet dependencies — the "
+                        f"paper's termination conditions 1/2 can never hold")
+                if stored and self._unconsumed != "ignore":
+                    msg = (f"quiescent with {stored} unconsumed transitory "
+                           f"event(s) (paper termination condition 4)")
+                    if self._unconsumed == "error":
+                        raise EdatDeadlockError(msg)
+                    import warnings
+                    warnings.warn(msg, stacklevel=1)
+                return
+            prev = (s, rcv)
+            time.sleep(self._poll_interval)

@@ -1,0 +1,547 @@
+"""Per-rank scheduler: dependency matching, ready queue, workers, locks.
+
+Implements the paper's semantics precisely:
+
+* FIFO task execution policy (paper §II.F);
+* earlier-registered consumers have precedence in consuming events
+  (paper §II.B "a task submitted before another task ... has a higher
+  precedence in the consumption of events");
+* events delivered to a task in *dependency order*, not arrival order
+  (paper §II.A);
+* persistent tasks keep multiple partially-filled dependency *frames* in
+  flight (paper §IV.A);
+* persistent events re-fire locally upon consumption (paper §IV.A);
+* ``wait`` parks the task, frees the worker (a replacement worker thread is
+  spawned so the configured concurrency is preserved) and releases/reacquires
+  named locks (paper §IV.B/C);
+* named locks auto-release at task end (paper §IV.C).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .event import ALL, ANY, SELF, Dep, Event
+
+_inst_uid = itertools.count()
+
+
+class Slot:
+    """One dependency slot of a consumer (one expected event)."""
+
+    __slots__ = ("dep", "event")
+
+    def __init__(self, dep: Dep):
+        self.dep = dep
+        self.event: Optional[Event] = None
+
+    @property
+    def filled(self) -> bool:
+        return self.event is not None
+
+
+def expand_deps(deps: List[Dep], rank: int, n_ranks: int) -> List[Dep]:
+    """Resolve SELF and expand ALL into one dep per rank (paper §II.D)."""
+    out: List[Dep] = []
+    for d in deps:
+        if d.source is SELF:
+            out.append(Dep(rank, d.eid))
+        elif d.source is ALL:
+            out.extend(Dep(r, d.eid) for r in range(n_ranks))
+        else:
+            out.append(d)
+    return out
+
+
+class Frame:
+    """A (possibly partial) set of dependency slots (paper §IV.A)."""
+
+    __slots__ = ("slots", "birth")
+    _birth = itertools.count()
+
+    def __init__(self, deps: List[Dep]):
+        self.slots = [Slot(d) for d in deps]
+        self.birth = next(Frame._birth)
+
+    def try_fill(self, ev: Event) -> bool:
+        for s in self.slots:
+            if not s.filled and s.dep.matches(ev):
+                s.event = ev
+                return True
+        return False
+
+    @property
+    def complete(self) -> bool:
+        return all(s.filled for s in self.slots)
+
+    def events(self) -> List[Event]:
+        return [s.event for s in self.slots]  # dependency order (paper §II.A)
+
+
+class Consumer:
+    """Base: an ordered claim on future events (task or waiter)."""
+
+    __slots__ = ("deps", "name", "reg_order")
+
+    def __init__(self, deps: List[Dep], name: Optional[str]):
+        self.deps = deps
+        self.name = name
+        self.reg_order = -1
+
+    def try_fill(self, ev: Event) -> bool:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def pop_ready(self) -> Optional[List[Event]]:  # pragma: no cover
+        raise NotImplementedError
+
+    @property
+    def done(self) -> bool:  # transitory consumers leave the registry when done
+        raise NotImplementedError
+
+
+class TaskConsumer(Consumer):
+    """A submitted task (transitory or persistent)."""
+
+    __slots__ = ("fn", "persistent", "frames", "fired")
+
+    def __init__(self, fn, deps, name, persistent):
+        super().__init__(deps, name)
+        self.fn = fn
+        self.persistent = persistent
+        self.frames: List[Frame] = [Frame(deps)] if deps else []
+        self.fired = False  # transitory + zero-dep: executes exactly once
+
+    def try_fill(self, ev: Event) -> bool:
+        # earliest frame missing a matching slot (paper §IV.A)
+        for f in self.frames:
+            if f.try_fill(ev):
+                return True
+        if self.persistent:
+            f = Frame(self.deps)
+            if f.try_fill(ev):
+                self.frames.append(f)
+                return True
+        return False
+
+    def pop_ready(self) -> Optional[List[Event]]:
+        for i, f in enumerate(self.frames):
+            if f.complete:
+                self.frames.pop(i)
+                if self.persistent and not self.frames:
+                    self.frames.append(Frame(self.deps))
+                return f.events()
+        return None
+
+    @property
+    def done(self) -> bool:
+        return not self.persistent and not self.frames
+
+    def unmet(self) -> bool:
+        """True if a transitory task still awaits events (deadlock check)."""
+        return not self.persistent and bool(self.frames)
+
+
+class Waiter(Consumer):
+    """A parked task inside ``wait`` (paper §IV.B)."""
+
+    __slots__ = ("frame", "cv", "woken")
+
+    def __init__(self, deps, cv: threading.Condition):
+        super().__init__(deps, None)
+        self.frame = Frame(deps)
+        self.cv = cv
+        self.woken = False
+
+    def try_fill(self, ev: Event) -> bool:
+        return self.frame.try_fill(ev)
+
+    def pop_ready(self) -> Optional[List[Event]]:
+        if self.frame.complete and not self.woken:
+            self.woken = True
+            return self.frame.events()
+        return None
+
+    @property
+    def done(self) -> bool:
+        return self.woken
+
+
+class Instance:
+    """A task execution instance on the ready queue."""
+
+    __slots__ = ("fn", "events", "name", "uid")
+
+    def __init__(self, fn, events, name):
+        self.fn = fn
+        self.events = events
+        self.name = name
+        self.uid = next(_inst_uid)
+
+
+class _TaskTLS(threading.local):
+    def __init__(self):
+        self.locks: Optional[set] = None       # names held by current task
+        self.exit_after_task = False           # replacement-worker shedding
+        self.in_task = False
+
+
+class Scheduler:
+    """One rank's scheduler (paper: one 'process')."""
+
+    def __init__(self, rank: int, n_ranks: int, runtime, target_workers: int,
+                 progress_mode: str = "thread"):
+        self.rank = rank
+        self.n_ranks = n_ranks
+        self.runtime = runtime
+        self.target = max(1, target_workers)
+        self.progress_mode = progress_mode
+
+        self._mu = threading.Lock()
+        self._cv = threading.Condition(self._mu)
+
+        self._consumers: List[Consumer] = []   # registration order = precedence
+        self._reg_counter = itertools.count()
+        self._store: Dict[Tuple[int, str], deque] = {}
+        self._arrival = itertools.count()      # store-arrival order (for ANY)
+        self._ready: deque = deque()
+
+        self._running = 0
+        self._parked = 0
+        self._loops = 0                        # worker threads in their loop
+        self._shutdown = False
+        self._main_done = False
+
+        # termination counters (user events only)
+        self.sent = 0
+        self.received = 0
+
+        # named locks: name -> (owner thread id | None, waiters condition)
+        self._locks: Dict[str, Any] = {}
+        self._lock_cv = threading.Condition(self._mu)
+
+        self._tls = _TaskTLS()
+        self._threads: List[threading.Thread] = []
+        self._executed = 0  # stats
+
+    # ------------------------------------------------------------------ util
+    def _spawn_worker(self):
+        t = threading.Thread(target=self._worker_loop, daemon=True,
+                             name=f"edat-w{self.rank}")
+        self._threads.append(t)
+        t.start()
+
+    def start(self):
+        for _ in range(self.target):
+            self._spawn_worker()
+
+    def stop(self):
+        with self._mu:
+            self._shutdown = True
+            self._cv.notify_all()
+            self._lock_cv.notify_all()
+        for c in list(self._consumers):
+            if isinstance(c, Waiter):
+                with c.cv:
+                    c.cv.notify_all()
+
+    def join(self, timeout: float = 5.0):
+        for t in self._threads:
+            t.join(timeout)
+
+    # -------------------------------------------------------------- delivery
+    def deliver(self, ev: Event) -> None:
+        """Process an arriving event: offer to consumers (in precedence
+        order), else store.  Caller: progress thread / polling worker."""
+        ready: List[Instance] = []
+        wake: List[Waiter] = []
+        with self._mu:
+            self.received += 1
+            self._offer_locked(ev, ready, wake)
+            for inst in ready:
+                self._ready.append(inst)
+            if ready:
+                self._cv.notify_all()
+        for w in wake:
+            with w.cv:
+                w.cv.notify_all()
+
+    def _offer_locked(self, ev: Event, ready: List[Instance],
+                      wake: List[Waiter]) -> None:
+        for c in self._consumers:
+            if c.try_fill(ev):
+                self._consumed_locked(ev)
+                self._drain_consumer_locked(c, ready, wake)
+                return
+        key = (ev.source, ev.eid)
+        ev.seq_store = next(self._arrival)  # type: ignore[attr-defined]
+        self._store.setdefault(key, deque()).append(ev)
+
+    def _consumed_locked(self, ev: Event) -> None:
+        """Persistent events re-fire locally on consumption (paper §IV.A)."""
+        if ev.persistent:
+            self.runtime._refire_local(self.rank, ev)
+
+    def _drain_consumer_locked(self, c: Consumer, ready: List[Instance],
+                               wake: List[Waiter]) -> None:
+        while True:
+            evs = c.pop_ready()
+            if evs is None:
+                break
+            if isinstance(c, TaskConsumer):
+                ready.append(Instance(c.fn, evs, c.name))
+            else:
+                wake.append(c)  # Waiter: events already in its frame
+        if c.done:
+            try:
+                self._consumers.remove(c)
+            except ValueError:
+                pass
+
+    def _take_from_store_locked(self, dep: Dep) -> Optional[Event]:
+        """Oldest stored event matching ``dep`` (ANY scans all sources)."""
+        best_key, best_seq = None, None
+        if dep.source is ANY:
+            for (src, eid), dq in self._store.items():
+                if eid == dep.eid and dq:
+                    seq = dq[0].seq_store  # type: ignore[attr-defined]
+                    if best_seq is None or seq < best_seq:
+                        best_key, best_seq = (src, eid), seq
+        else:
+            key = (dep.source, dep.eid)
+            if self._store.get(key):
+                best_key = key
+        if best_key is None:
+            return None
+        dq = self._store[best_key]
+        ev = dq.popleft()
+        if not dq:
+            del self._store[best_key]
+        return ev
+
+    def _fill_from_store_locked(self, c: Consumer, ready: List[Instance],
+                                wake: List[Waiter]) -> None:
+        """Greedily satisfy a new consumer from stored events (keeps firing
+        new frames for persistent tasks until the store runs dry)."""
+        progress = True
+        while progress:
+            progress = False
+            if isinstance(c, TaskConsumer):
+                frames = c.frames if c.frames else (
+                    [Frame(c.deps)] if c.persistent and c.deps else [])
+                if c.persistent and c.deps and not c.frames:
+                    c.frames = frames
+            for f in (c.frames if isinstance(c, TaskConsumer) else [c.frame]):
+                for s in f.slots:
+                    if s.filled:
+                        continue
+                    ev = self._take_from_store_locked(s.dep)
+                    if ev is not None:
+                        s.event = ev
+                        self._consumed_locked(ev)
+                        progress = True
+            self._drain_consumer_locked(c, ready, wake)
+            if c.done or not isinstance(c, TaskConsumer) or not c.persistent:
+                break
+
+    # ------------------------------------------------------------ submission
+    def submit(self, fn: Callable, deps: List[Dep], name: Optional[str],
+               persistent: bool) -> None:
+        deps = expand_deps(deps, self.rank, self.n_ranks)
+        c = TaskConsumer(fn, deps, name, persistent)
+        ready: List[Instance] = []
+        wake: List[Waiter] = []
+        with self._mu:
+            c.reg_order = next(self._reg_counter)
+            if not deps and not persistent:
+                # zero-dependency transitory task: immediately eligible
+                ready.append(Instance(fn, [], name))
+            else:
+                self._fill_from_store_locked(c, ready, wake)
+                if not c.done:
+                    self._consumers.append(c)
+            for inst in ready:
+                self._ready.append(inst)
+            if ready:
+                self._cv.notify_all()
+        for w in wake:
+            with w.cv:
+                w.cv.notify_all()
+
+    def remove_task(self, name: str) -> bool:
+        """Remove a named (typically persistent) task (paper §IV.A)."""
+        with self._mu:
+            for c in self._consumers:
+                if c.name == name:
+                    self._consumers.remove(c)
+                    return True
+        return False
+
+    # ------------------------------------------------------- wait / retrieve
+    def wait(self, deps: List[Dep]) -> List[Event]:
+        """Paper §IV.B ``edatWait``: pause task until deps satisfied."""
+        deps = expand_deps(deps, self.rank, self.n_ranks)
+        cv = threading.Condition()
+        w = Waiter(deps, cv)
+        ready: List[Instance] = []
+        wake: List[Waiter] = []
+        with self._mu:
+            self._fill_from_store_locked(w, ready, wake)
+            assert not ready
+            if w.frame.complete:
+                w.woken = True
+                return w.frame.events()
+            w.reg_order = next(self._reg_counter)
+            self._consumers.append(w)
+            in_task = self._tls.in_task
+            if in_task:
+                # park: free the running slot; spawn a replacement worker so
+                # the configured concurrency is preserved (paper §IV.B).
+                # The parking thread leaves the pool permanently (it exits
+                # after its task completes) — only on the first park.
+                self._running -= 1
+                if not self._tls.exit_after_task:
+                    self._tls.exit_after_task = True
+                    self._loops -= 1
+                    self._spawn_worker()
+            self._parked += 1
+            self._cv.notify_all()
+        held = self._release_all_locks()
+        with cv:
+            while not w.frame.complete and not self._shutdown:
+                cv.wait(0.05)
+        with self._mu:
+            if in_task:
+                # re-acquire a running slot before resuming (paper: "a worker
+                # will continue to run the task")
+                while self._running >= self.target and not self._shutdown:
+                    self._cv.wait(0.05)
+                self._running += 1
+            self._parked -= 1
+        self._reacquire_locks(held)
+        if self._shutdown and not w.frame.complete:
+            raise RuntimeError("EDAT shut down while task was waiting")
+        return w.frame.events()
+
+    def retrieve_any(self, deps: List[Dep]) -> List[Event]:
+        """Paper §IV.B ``edatRetrieveAny``: non-blocking subset retrieval."""
+        deps = expand_deps(deps, self.rank, self.n_ranks)
+        got: List[Event] = []
+        with self._mu:
+            for d in deps:
+                ev = self._take_from_store_locked(d)
+                if ev is not None:
+                    self._consumed_locked(ev)
+                    got.append(ev)
+        return got
+
+    # ----------------------------------------------------------------- locks
+    def lock(self, name: str, blocking: bool = True) -> bool:
+        me = threading.get_ident()
+        with self._mu:
+            owner = self._locks.get(name)
+            if owner == me:
+                return True
+            while self._locks.get(name) is not None:
+                if not blocking:
+                    return False
+                self._lock_cv.wait(0.05)
+                if self._shutdown:
+                    return False
+            self._locks[name] = me
+        if self._tls.locks is not None:
+            self._tls.locks.add(name)
+        return True
+
+    def unlock(self, name: str) -> None:
+        with self._mu:
+            if self._locks.get(name) == threading.get_ident():
+                self._locks[name] = None
+                self._lock_cv.notify_all()
+        if self._tls.locks is not None:
+            self._tls.locks.discard(name)
+
+    def test_lock(self, name: str) -> bool:
+        return self.lock(name, blocking=False)
+
+    def _release_all_locks(self) -> List[str]:
+        held = sorted(self._tls.locks) if self._tls.locks else []
+        for n in held:
+            self.unlock(n)
+        return held
+
+    def _reacquire_locks(self, names: List[str]) -> None:
+        for n in names:  # sorted order: deterministic, reduces deadlock risk
+            self.lock(n)
+
+    # --------------------------------------------------------------- workers
+    def _worker_loop(self):
+        with self._mu:
+            self._loops += 1
+        poll = self.progress_mode == "worker"
+        while True:
+            inst = None
+            with self._mu:
+                if self._loops > self.target or (
+                        self._shutdown and not self._ready):
+                    self._loops -= 1
+                    return
+                if self._ready and self._running < self.target:
+                    inst = self._ready.popleft()
+                    self._running += 1
+            if inst is None:
+                if poll and self._poll_once():
+                    continue
+                with self._mu:
+                    if not self._ready and not self._shutdown:
+                        self._cv.wait(0.002 if poll else 0.1)
+                continue
+            self._run(inst)
+            if self._tls.exit_after_task:
+                # this thread left the pool when it parked (loops already
+                # decremented); a replacement is looping in its stead
+                self._tls.exit_after_task = False
+                return
+
+    def _poll_once(self) -> bool:
+        """Idle-worker progress polling (paper §II.F alternative mode)."""
+        return self.runtime._progress_poll(self.rank)
+
+    def _run(self, inst: Instance):
+        ctx = self.runtime._ctx(self.rank)
+        self._tls.locks = set()
+        self._tls.in_task = True
+        try:
+            inst.fn(ctx, inst.events)
+        except Exception as e:  # noqa: BLE001 - report any task failure
+            self.runtime._task_failed(self.rank, inst, e)
+        finally:
+            self._tls.in_task = False
+            for n in sorted(self._tls.locks):
+                self.unlock(n)  # auto-release (paper §IV.C)
+            self._tls.locks = None
+            with self._mu:
+                self._running -= 1
+                self._executed += 1
+                self._cv.notify_all()
+
+    # ---------------------------------------------------------- termination
+    def set_main_done(self):
+        with self._mu:
+            self._main_done = True
+
+    def status(self) -> dict:
+        with self._mu:
+            unmet = sum(1 for c in self._consumers
+                        if isinstance(c, TaskConsumer) and c.unmet())
+            stored_transitory = sum(
+                sum(1 for e in dq if not e.persistent)
+                for dq in self._store.values())
+            return dict(
+                sent=self.sent, received=self.received,
+                idle=(not self._ready and self._running == 0
+                      and self._main_done),
+                parked=self._parked, unmet=unmet,
+                stored=stored_transitory, executed=self._executed,
+            )

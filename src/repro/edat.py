@@ -1,0 +1,3 @@
+"""Convenience alias: ``from repro import edat``."""
+from repro.core import *  # noqa: F401,F403
+from repro.core import __all__  # noqa: F401

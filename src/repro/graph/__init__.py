@@ -1,0 +1,2 @@
+from .kronecker import kronecker_edges, build_csr, PartitionedCSR
+from .bfs import EdatBFS, ReferenceBFS, validate_bfs_tree

@@ -1,0 +1,230 @@
+"""Graph500 BFS kernel: EDAT event-driven vs bulk-synchronous reference.
+
+EDAT version (paper §V, Fig 2): one *persistent* visit task per rank with
+an EDAT_ALL dependency on ``visit`` events.  Each level, every rank fires
+exactly one batched visit event to every rank (possibly empty), so the
+ALL-dependency frames pair levels deterministically via the per-(src,dst)
+FIFO guarantee — the level barrier is *implicit in the event matching*,
+no global synchronisation call exists.  Per-rank frontier expansion is
+vectorised numpy (the TPU-native adaptation: batch the per-vertex handler).
+
+Reference version: classic BSP level-synchronous BFS — compute, exchange,
+explicit global barrier per level (threading.Barrier standing in for
+MPI_Alltoallv + barrier).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro import edat
+from .kronecker import PartitionedCSR
+
+
+# --------------------------------------------------------------- EDAT BFS
+class EdatBFS:
+    def __init__(self, csr: PartitionedCSR, workers_per_rank: int = 1,
+                 progress: str = "thread"):
+        self.csr = csr
+        self.workers = workers_per_rank
+        self.progress = progress
+        self.parent: List[Optional[np.ndarray]] = [None] * csr.n_ranks
+        self.traversed = [0] * csr.n_ranks
+
+    def run(self, root: int) -> np.ndarray:
+        csr = self.csr
+        n_ranks = csr.n_ranks
+        rt = edat.Runtime(n_ranks, workers_per_rank=self.workers,
+                          progress=self.progress, unconsumed="error")
+        self._rt = rt
+        rt.run(lambda ctx: self._main(ctx, root), timeout=600)
+        out = np.full(csr.n_vertices, -1, np.int64)
+        for r in range(n_ranks):
+            lo, hi = csr.local_range(r)
+            out[lo:hi] = self.parent[r]
+        return out
+
+    def _main(self, ctx: edat.Context, root: int):
+        csr = self.csr
+        lo, hi = csr.local_range(ctx.rank)
+        self.parent[ctx.rank] = np.full(hi - lo, -1, np.int64)
+
+        ctx.submit_persistent(self._visit_task,
+                              deps=[(edat.ALL, "visit")], name="visit")
+        # level 0: everyone fires its (mostly empty) seed batch
+        if csr.owner(np.int64(root)) == ctx.rank:
+            seed = np.array([[root, root]], np.int64)
+        else:
+            seed = np.empty((0, 2), np.int64)
+        for r in range(ctx.n_ranks):
+            ctx.fire(r if r != ctx.rank else edat.SELF, "visit",
+                     {"edges": seed if r == csr.owner(np.int64(root))
+                      else np.empty((0, 2), np.int64), "active": 1})
+
+    def _visit_task(self, ctx: edat.Context, events):
+        """One execution per level: consume all ranks' batches, expand."""
+        csr = self.csr
+        lo, hi = csr.local_range(ctx.rank)
+        parent = self.parent[ctx.rank]
+
+        total_active = sum(ev.data["active"] for ev in events)
+        if total_active == 0:
+            return  # converged: nobody fired real work; stop the cascade
+
+        batches = [ev.data["edges"] for ev in events
+                   if len(ev.data["edges"])]
+        if batches:
+            inc = np.concatenate(batches)       # (k, 2): [dst, parent]
+            v = inc[:, 0] - lo
+            first = np.unique(v, return_index=True)[1]
+            v, p = v[first], inc[first, 1]
+            fresh = parent[v] == -1
+            v, p = v[fresh], p[fresh]
+            parent[v] = p
+            frontier = v + lo
+        else:
+            frontier = np.empty((0,), np.int64)
+
+        # expand local frontier via CSR (vectorised)
+        indptr, indices = csr.indptr[ctx.rank], csr.indices[ctx.rank]
+        vloc = frontier - lo
+        starts, ends = indptr[vloc], indptr[vloc + 1]
+        counts = ends - starts
+        self.traversed[ctx.rank] += int(counts.sum())
+        if len(vloc):
+            offs = np.repeat(starts, counts) + (
+                np.arange(counts.sum()) -
+                np.repeat(np.cumsum(counts) - counts, counts))
+            nbrs = indices[offs]
+            pars = np.repeat(frontier, counts)
+            owners = csr.owner(nbrs)
+            order = np.argsort(owners, kind="stable")
+            nbrs, pars, owners = nbrs[order], pars[order], owners[order]
+            cuts = np.searchsorted(owners, np.arange(ctx.n_ranks + 1))
+        else:
+            nbrs = pars = np.empty((0,), np.int64)
+            cuts = np.zeros(ctx.n_ranks + 1, np.int64)
+
+        active = 1 if len(frontier) else 0
+        for r in range(ctx.n_ranks):
+            sl = slice(cuts[r], cuts[r + 1])
+            batch = np.stack([nbrs[sl], pars[sl]], axis=1)
+            ctx.fire(r if r != ctx.rank else edat.SELF, "visit",
+                     {"edges": batch, "active": active})
+
+
+# ---------------------------------------------------------- BSP reference
+class ReferenceBFS:
+    """Bulk-synchronous level-stepped BFS (the paper's reference analog)."""
+
+    def __init__(self, csr: PartitionedCSR):
+        self.csr = csr
+        self.traversed = [0] * csr.n_ranks
+
+    def run(self, root: int) -> np.ndarray:
+        csr = self.csr
+        n = csr.n_ranks
+        barrier = threading.Barrier(n)
+        parent = [np.full(csr.local_range(r)[1] - csr.local_range(r)[0],
+                          -1, np.int64) for r in range(n)]
+        # exchange buffers: inbox[dst][src] = batch
+        inbox = [[None] * n for _ in range(n)]
+        done = [False]
+
+        def worker(rank):
+            lo, hi = csr.local_range(rank)
+            if csr.owner(np.int64(root)) == rank:
+                my = np.array([[root, root]], np.int64)
+            else:
+                my = np.empty((0, 2), np.int64)
+            for r in range(n):
+                inbox[r][rank] = my if csr.owner(np.int64(root)) == r \
+                    else np.empty((0, 2), np.int64)
+            barrier.wait()
+            while not done[0]:
+                inc = np.concatenate([b for b in inbox[rank]])
+                v = inc[:, 0] - lo if len(inc) else np.empty((0,), np.int64)
+                if len(v):
+                    first = np.unique(v, return_index=True)[1]
+                    v, p = v[first], inc[first, 1]
+                    fresh = parent[rank][v] == -1
+                    v, p = v[fresh], p[fresh]
+                    parent[rank][v] = p
+                    frontier = v + lo
+                else:
+                    frontier = np.empty((0,), np.int64)
+                indptr, indices = csr.indptr[rank], csr.indices[rank]
+                vloc = frontier - lo
+                starts, ends = indptr[vloc], indptr[vloc + 1]
+                counts = ends - starts
+                self.traversed[rank] += int(counts.sum())
+                if len(vloc):
+                    offs = np.repeat(starts, counts) + (
+                        np.arange(counts.sum()) -
+                        np.repeat(np.cumsum(counts) - counts, counts))
+                    nbrs = indices[offs]
+                    pars = np.repeat(frontier, counts)
+                    owners = csr.owner(nbrs)
+                    order = np.argsort(owners, kind="stable")
+                    nbrs, pars, owners = nbrs[order], pars[order], owners[order]
+                    cuts = np.searchsorted(owners, np.arange(n + 1))
+                else:
+                    nbrs = pars = np.empty((0,), np.int64)
+                    cuts = np.zeros(n + 1, np.int64)
+                out = [np.stack([nbrs[cuts[r]:cuts[r + 1]],
+                                 pars[cuts[r]:cuts[r + 1]]], axis=1)
+                       for r in range(n)]
+                got_any = len(frontier) > 0
+                barrier.wait()               # everyone finished computing
+                for r in range(n):
+                    inbox[r][rank] = out[r]
+                self._active[rank] = got_any
+                barrier.wait()               # exchange complete
+                if rank == 0:
+                    done[0] = not any(self._active)
+                barrier.wait()               # "broadcast" of done flag
+
+        self._active = [True] * n
+        threads = [threading.Thread(target=worker, args=(r,)) for r in
+                   range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        out = np.full(csr.n_vertices, -1, np.int64)
+        for r in range(n):
+            lo, hi = csr.local_range(r)
+            out[lo:hi] = parent[r]
+        return out
+
+
+def validate_bfs_tree(edges: np.ndarray, parent: np.ndarray,
+                      root: int) -> bool:
+    """Graph500-style validation: root is its own parent, every reached
+    vertex's parent edge exists, tree levels are consistent (parent level =
+    child level - 1 via BFS from root over the tree)."""
+    n = len(parent)
+    if parent[root] != root:
+        return False
+    eset = set()
+    for s, d in edges.T:
+        if s != d:
+            eset.add((min(int(s), int(d)), max(int(s), int(d))))
+    reached = np.where(parent >= 0)[0]
+    for v in reached:
+        p = int(parent[v])
+        if v != root and (min(v, p), max(v, p)) not in eset:
+            return False
+    # level consistency via tree walk
+    level = np.full(n, -1, np.int64)
+    level[root] = 0
+    # iterate: child level = parent level + 1 (tree is acyclic by parent)
+    for _ in range(n):
+        upd = (level == -1) & (parent >= 0) & (level[parent] >= 0)
+        if not upd.any():
+            break
+        level[np.where(upd)[0]] = level[parent[np.where(upd)[0]]] + 1
+    return bool((level[reached] >= 0).all())

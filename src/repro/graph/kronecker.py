@@ -1,0 +1,80 @@
+"""Graph500 Kronecker (R-MAT) generator + partitioned CSR.
+
+Vectorised numpy implementation of the Graph500 reference generator
+(A=0.57, B=0.19, C=0.19, D=0.05), scale s -> 2^s vertices, edgefactor 16.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+A, B, C = 0.57, 0.19, 0.19
+
+
+def kronecker_edges(scale: int, edgefactor: int = 16,
+                    seed: int = 20) -> np.ndarray:
+    """Returns (2, M) int64 edge list (undirected; duplicates/selfloops kept
+    as in the reference, filtered during CSR build)."""
+    n = 1 << scale
+    m = n * edgefactor
+    rng = np.random.default_rng(seed)
+    src = np.zeros(m, np.int64)
+    dst = np.zeros(m, np.int64)
+    ab, c_norm, a_norm = A + B, C / (1 - A - B), A / (A + B)
+    for bit in range(scale):
+        ii = rng.random(m) > ab
+        jj = rng.random(m) > np.where(ii, c_norm, a_norm)
+        src |= (ii.astype(np.int64) << bit)
+        dst |= (jj.astype(np.int64) << bit)
+    # permute vertex labels (deterministic) to avoid locality artifacts
+    perm = rng.permutation(n)
+    src, dst = perm[src], perm[dst]
+    return np.stack([src, dst])
+
+
+@dataclasses.dataclass
+class PartitionedCSR:
+    """Block 1-D vertex partition across ranks; per-rank CSR of OUT edges."""
+    n_vertices: int
+    n_ranks: int
+    indptr: List[np.ndarray]     # per rank, local CSR
+    indices: List[np.ndarray]
+    n_edges: int
+
+    def owner(self, v):
+        return np.minimum(v // self.block, self.n_ranks - 1)
+
+    @property
+    def block(self):
+        return -(-self.n_vertices // self.n_ranks)
+
+    def local_range(self, rank) -> Tuple[int, int]:
+        lo = rank * self.block
+        return lo, min(lo + self.block, self.n_vertices)
+
+
+def build_csr(edges: np.ndarray, n_vertices: int,
+              n_ranks: int) -> PartitionedCSR:
+    src = np.concatenate([edges[0], edges[1]])   # undirected: both dirs
+    dst = np.concatenate([edges[1], edges[0]])
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    order = np.lexsort((dst, src))
+    src, dst = src[order], dst[order]
+    dedup = np.ones(len(src), bool)
+    dedup[1:] = (src[1:] != src[:-1]) | (dst[1:] != dst[:-1])
+    src, dst = src[dedup], dst[dedup]
+
+    block = -(-n_vertices // n_ranks)
+    indptr, indices = [], []
+    for r in range(n_ranks):
+        lo, hi = r * block, min((r + 1) * block, n_vertices)
+        sel = (src >= lo) & (src < hi)
+        s, d = src[sel] - lo, dst[sel]
+        counts = np.bincount(s, minlength=hi - lo)
+        indptr.append(np.concatenate([[0], np.cumsum(counts)]).astype(np.int64))
+        indices.append(d.astype(np.int64))
+    return PartitionedCSR(n_vertices, n_ranks, indptr, indices,
+                          n_edges=len(src) // 2)

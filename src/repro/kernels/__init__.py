@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (validated on CPU via interpret=True).
+
+Each kernel package: kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd public wrapper + custom_vjp), ref.py (pure-jnp oracle).
+"""

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def attention_ref(q, k, v, *, scale: float, causal: bool = True,
+                  window: Optional[int] = None,
+                  softcap: Optional[float] = None):
+    """q: (B, H, S, D); k/v: (B, KH, S, D[v]) -> (B, H, S, Dv)."""
+    B, H, S, D = q.shape
+    KH = k.shape[1]
+    g = H // KH
+    qr = q.reshape(B, KH, g, S, D)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qr.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p.astype(v.dtype), v)
+    return out.reshape(B, H, S, v.shape[-1])

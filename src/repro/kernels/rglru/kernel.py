@@ -1,0 +1,87 @@
+"""Pallas TPU kernel for the RG-LRU diagonal recurrence.
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),  a_t = exp(-c*sp(Λ)*r_t)
+
+Grid = (batch, width_blocks, time_blocks); time is sequential and carries
+h (one (block_w,) vector) in VMEM scratch.  Within a time block the
+recurrence is a first-order scan over block_t steps of (block_w,)-wide
+elementwise VPU ops — computed as a log-space blocked prefix product
+(cumprod of a via cumsum of log a) so the inner loop is vectorised, not a
+fori over scalars.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_C = 8.0
+
+
+def _rglru_kernel(x_ref, r_ref, i_ref, lam_ref, y_ref, h_ref, *,
+                  block_t: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)      # (bt, bw)
+    r = r_ref[0].astype(jnp.float32)
+    i = i_ref[0].astype(jnp.float32)
+    lam = lam_ref[...].astype(jnp.float32)  # (bw,)
+
+    log_a = -_C * jax.nn.softplus(lam)[None, :] * r      # (bt, bw) <= 0
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x)
+
+    # blocked scan in log space: A_t = prod_{<=t} a = exp(cumsum log_a)
+    cum = jnp.cumsum(log_a, axis=0)                      # (bt, bw)
+    A = jnp.exp(cum)
+    # h_t = A_t * (h0 + sum_{j<=t} b_j / A_j)  -- numerically safe because
+    # b_j/A_j = b_j * exp(-cum_j) and cum_j <= 0 could explode; instead use
+    # the equivalent masked-matmul form on shifted prefixes:
+    #   h_t = A_t*h0 + sum_{j<=t} exp(cum_t - cum_j) b_j
+    seg = cum[:, None, :] - cum[None, :, :]              # (bt, bt, bw)
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (block_t, block_t), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (block_t, block_t), 1)
+    mask = (iota_j <= iota_i)[:, :, None]
+    w = jnp.exp(jnp.where(mask, seg, -1e30))             # (bt, bt, bw)
+    h_series = jnp.einsum("tjw,jw->tw", w, b) + A * h_ref[...][None, :]
+
+    h_ref[...] = h_series[-1]
+    y_ref[0] = h_series.astype(y_ref.dtype)
+
+
+def rglru_fwd(x, r, i, lam, *, block_t: int = 128, block_w: int = 256,
+              interpret: bool = False):
+    """x, r, i: (B, T, W) fp32; lam: (W,).  Returns h: (B, T, W)."""
+    B, T, W = x.shape
+    block_t = min(block_t, T)
+    block_w = min(block_w, W)
+    assert T % block_t == 0 and W % block_w == 0
+    nt, nw = T // block_t, W // block_w
+
+    from jax.experimental.pallas import tpu as pltpu
+    kernel = functools.partial(_rglru_kernel, block_t=block_t)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nw, nt),
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_w),
+                         lambda b, iw, it: (b, it, iw)),
+            pl.BlockSpec((1, block_t, block_w),
+                         lambda b, iw, it: (b, it, iw)),
+            pl.BlockSpec((1, block_t, block_w),
+                         lambda b, iw, it: (b, it, iw)),
+            pl.BlockSpec((block_w,), lambda b, iw, it: (iw,)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t, block_w),
+                               lambda b, iw, it: (b, it, iw)),
+        out_shape=jax.ShapeDtypeStruct((B, T, W), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_w,), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, r, i, lam)

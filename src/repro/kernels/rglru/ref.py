@@ -1,0 +1,12 @@
+"""Oracle: associative-scan RG-LRU from the model."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.rglru import _rglru_scan
+
+
+def rglru_ref(x, r, i, lam):
+    """x, r, i: (B, T, W) fp32; lam: (W,) -> h (B, T, W)."""
+    return _rglru_scan(x.astype(jnp.float32), r.astype(jnp.float32),
+                       i.astype(jnp.float32), lam.astype(jnp.float32))

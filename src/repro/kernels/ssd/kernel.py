@@ -1,0 +1,94 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan.
+
+Grid = (batch, heads, chunks); the chunk axis is sequential ('arbitrary')
+and carries the (d_state x head_dim) SSM state in VMEM scratch.  Within a
+chunk everything is dense (Q x Q attention-like quadratic + two (Q x N) x
+(N x P) matmuls), so the MXU does the heavy lifting; chunk=128 aligns the
+tiles.  This mirrors ``ref.ssd_reference`` exactly (same masking-in-log-
+space trick to avoid masked-inf gradients).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, y_ref, state_ref, *,
+                chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)           # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (Q,)
+    a = -jnp.exp(alog_ref[0].astype(jnp.float32))    # scalar
+    b = b_ref[0, :, 0].astype(jnp.float32)           # (Q, N)
+    c = c_ref[0, :, 0].astype(jnp.float32)           # (Q, N)
+
+    da = dt * a                                      # (Q,) log decay
+    cum = jnp.cumsum(da)                             # (Q,)
+
+    # intra-chunk quadratic: y_i += sum_{j<=i} e^{cum_i-cum_j} dt_j (c_i.b_j) x_j
+    seg = cum[:, None] - cum[None, :]                # (Q, Q)
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    mask = iota_j <= iota_i
+    decay = jnp.exp(jnp.where(mask, seg, NEG_INF))
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    att = cb * decay * dt[None, :]
+    y = jax.lax.dot_general(att, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q, P)
+
+    # inter-chunk: y_i += e^{cum_i} c_i . S_prev
+    s_prev = state_ref[...]                          # (N, P)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        c, s_prev, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # state update: S = e^{sum da} S_prev + sum_j e^{cum_last-cum_j} dt_j b_j x_j^T
+    w = jnp.exp(cum[-1] - cum) * dt                  # (Q,)
+    local = jax.lax.dot_general(b * w[:, None], x,
+                                (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (N, P)
+    state_ref[...] = jnp.exp(jnp.sum(da)) * s_prev + local
+
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_fwd(x, dt, a_log, b, c, *, chunk: int = 128,
+            interpret: bool = False):
+    """x: (B, T, H, P); dt: (B, T, H); a_log: (H,); b, c: (B, T, H, N)
+    (groups already broadcast to heads).  T % chunk == 0."""
+    B, T, H, Pd = x.shape
+    N = b.shape[-1]
+    assert T % chunk == 0
+    nc = T // chunk
+
+    from jax.experimental.pallas import tpu as pltpu
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, Pd), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, chunk, 1, N), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda ib, ih, ic: (ib, ic, ih, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, Pd),
+                               lambda ib, ih, ic: (ib, ic, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T, H, Pd), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, Pd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, a_log, b, c)

@@ -1,0 +1,52 @@
+"""Jit'd wrapper for the SSD kernel (+ custom_vjp via reference)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _k
+from .ref import ssd_reference
+
+_INTERPRET = jax.default_backend() == "cpu"
+
+
+def supported(T, chunk, Pd, N) -> bool:
+    return T % chunk == 0 and Pd % 8 == 0 and N % 8 == 0
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _ssd(x, dt, a_log, b, c, chunk):
+    return _k.ssd_fwd(x, dt, a_log, b, c, chunk=chunk, interpret=_INTERPRET)
+
+
+def _fwd(x, dt, a_log, b, c, chunk):
+    return _ssd(x, dt, a_log, b, c, chunk), (x, dt, a_log, b, c)
+
+
+def _bwd(chunk, res, g):
+    x, dt, a_log, b, c = res
+
+    def f(x, dt, a_log, b, c):
+        return ssd_reference(x, dt, a_log, b, c, chunk=chunk)
+
+    _, vjp = jax.vjp(f, x, dt, a_log, b, c)
+    return vjp(g.astype(jnp.float32))
+
+
+_ssd.defvjp(_fwd, _bwd)
+
+
+def ssd(x, dt, a_log, b, c, *, chunk: int = 128):
+    """x: (B,T,H,P); dt: (B,T,H); a_log: (H,); b,c: (B,T,G,N).
+
+    Broadcasts groups to heads then runs the kernel."""
+    H = x.shape[2]
+    G = b.shape[2]
+    if G != H:
+        rep = H // G
+        b = jnp.repeat(b, rep, axis=2)
+        c = jnp.repeat(c, rep, axis=2)
+    out = _ssd(x, dt.astype(jnp.float32), a_log, b, c, chunk)
+    return out.astype(jnp.float32)

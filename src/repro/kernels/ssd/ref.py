@@ -1,0 +1,2 @@
+"""Oracle: re-export the model's pure-jnp chunked SSD."""
+from repro.models.mamba2 import ssd_reference  # noqa: F401

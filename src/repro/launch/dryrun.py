@@ -1,0 +1,227 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost/collective analysis.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # single-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+
+Results land in experiments/dryrun/<mesh>/<arch>__<shape>.json; the roofline
+benchmark (benchmarks/roofline.py) consumes them.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_LINE_RE = re.compile(
+    r"=\s*([^=]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GRP_RE = re.compile(r"replica_groups=\[(\d+)(?:,(\d+))?\]")
+_GRP_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+# scan(length=N) bodies appear once in HLO: collectives inside a while loop
+# must be multiplied by the trip count.  XLA CPU emits the loop bound in the
+# while condition; we conservatively detect scan trip counts from the
+# "jvp()/while" metadata is unreliable, so we instead count collectives in
+# the unrolled module produced with as_text() of the *optimized* module —
+# trip counts are applied by the caller via cell metadata when needed.
+
+
+def _group_size(line: str) -> int:
+    m = _GRP_RE.search(line)
+    if m:
+        a, b = m.group(1), m.group(2)
+        return int(b) if b else int(a)
+    m = _GRP_EXPLICIT_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective traffic from the partitioned HLO.
+
+    For each collective instruction: ``raw`` sums the result-shape bytes
+    (shapes in the post-SPMD module are per-device); ``wire`` applies the
+    standard ring-traffic multipliers (all-reduce 2(g-1)/g, all-gather /
+    all-to-all (g-1)/g, reduce-scatter (g-1), permute 1).  Instructions
+    inside while loops (scan-over-layers) are counted once per loop body —
+    multiply by trip count externally where needed (roofline does)."""
+    per_op = {}
+    wire = {}
+    counts = {}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if m is None:
+            continue
+        if m.group(3) == "-done":
+            continue  # count the -start only
+        op = m.group(2)
+        lhs = m.group(1)
+        nbytes = 0
+        for dt, dims in _TYPE_RE.findall(lhs):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        if m.group(3) == "-start" and op == "all-reduce":
+            nbytes //= 2  # start tuple carries (operand, result)
+        g = _group_size(line)
+        if op == "all-reduce":
+            w = 2 * nbytes * (g - 1) / g
+        elif op in ("all-gather", "all-to-all"):
+            w = nbytes * (g - 1) / g
+        elif op == "reduce-scatter":
+            w = nbytes * (g - 1)
+        else:  # collective-permute
+            w = nbytes
+        per_op[op] = per_op.get(op, 0) + nbytes
+        wire[op] = wire.get(op, 0) + int(w)
+        counts[op] = counts.get(op, 0) + 1
+    per_op["total"] = sum(per_op.values())
+    wire["total"] = sum(wire.values())
+    return {"raw": per_op, "wire": wire, "counts": counts}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, outdir: str,
+             verbose: bool = True, variant: str = "",
+             **cell_kw) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    res = {"arch": arch, "shape": shape, "variant": variant,
+           "mesh": "x".join(map(str, mesh.devices.shape)),
+           "n_devices": mesh.devices.size, "cell_kw": repr(cell_kw)}
+    t0 = time.time()
+    try:
+        cell = build_cell(arch, shape, mesh, **cell_kw)
+        res["meta"] = {k: v for k, v in cell.meta.items()}
+        with mesh:
+            jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                             out_shardings=cell.out_shardings,
+                             donate_argnums=cell.donate)
+            lowered = jitted.lower(*cell.args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        res["lower_s"] = round(t1 - t0, 2)
+        res["compile_s"] = round(t2 - t1, 2)
+
+        try:
+            ma = compiled.memory_analysis()
+            res["memory"] = {
+                k: int(getattr(ma, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(ma, k)}
+            if verbose:
+                print(f"  memory_analysis: {res['memory']}")
+        except Exception as e:  # noqa: BLE001 - backend-dependent
+            res["memory"] = {"error": str(e)}
+
+        try:
+            ca = compiled.cost_analysis()
+            res["cost"] = {k: float(v) for k, v in ca.items()
+                           if isinstance(v, (int, float)) and (
+                               "flops" in k or "bytes" in k or "utiliz" in k)}
+            if verbose:
+                fl = res["cost"].get("flops", 0)
+                print(f"  cost_analysis: flops={fl:.3e}")
+        except Exception as e:  # noqa: BLE001
+            res["cost"] = {"error": str(e)}
+
+        hlo = compiled.as_text()
+        from repro.launch.hlo_analysis import analyze
+        res["analysis"] = analyze(hlo)   # trip-count-aware roll-up
+        res["collectives"] = collective_bytes(hlo)  # single-visit (legacy)
+        res["hlo_bytes"] = len(hlo)
+        res["ok"] = True
+        if verbose:
+            a = res["analysis"]
+            print(f"  rollup: dot_flops/dev={a['dot_flops']:.3e} "
+                  f"mem_bytes/dev={a['mem_bytes']:.3e} "
+                  f"coll_wire/dev={a['collective_wire_total']:.3e}")
+    except Exception as e:  # noqa: BLE001
+        res["ok"] = False
+        res["error"] = f"{type(e).__name__}: {e}"
+        res["traceback"] = traceback.format_exc()[-4000:]
+    res["total_s"] = round(time.time() - t0, 2)
+
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        tag = f"__{variant}" if variant else ""
+        path = os.path.join(outdir, f"{arch}__{shape}{tag}.json")
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+    return res
+
+
+def iter_cells():
+    for arch, spec in sorted(ARCHS.items()):
+        for shape in SHAPES:
+            if shape in spec.skip_shapes:
+                continue
+            yield arch, shape
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--outdir", default=None)
+    # perf-iteration knobs (§Perf hillclimbing); results tagged --variant
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--acc-dtype", default="float32")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--rg-blockheads", type=int, default=None)
+    ap.add_argument("--tp-sp", action="store_true")
+    args = ap.parse_args(argv)
+
+    mesh_tag = "pod2x16x16" if args.multi_pod else "pod16x16"
+    outdir = args.outdir or os.path.join("experiments", "dryrun", mesh_tag)
+    cell_kw = dict(microbatches=args.microbatches,
+                   acc_dtype=args.acc_dtype, remat=args.remat,
+                   optimizer=args.optimizer,
+                   rg_block_heads=args.rg_blockheads,
+                   tp_sp=args.tp_sp)
+
+    cells = list(iter_cells()) if args.all else [(args.arch, args.shape)]
+    failures = 0
+    for arch, shape in cells:
+        print(f"[dryrun {mesh_tag}] {arch} x {shape} ...", flush=True)
+        res = run_cell(arch, shape, args.multi_pod, outdir,
+                       variant=args.variant, **cell_kw)
+        status = "OK" if res["ok"] else f"FAIL: {res.get('error')}"
+        print(f"[dryrun {mesh_tag}] {arch} x {shape}: {status} "
+              f"({res['total_s']}s)", flush=True)
+        failures += 0 if res["ok"] else 1
+    print(f"[dryrun {mesh_tag}] done, {failures} failure(s) "
+          f"of {len(cells)} cells")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

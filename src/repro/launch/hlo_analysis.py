@@ -1,0 +1,310 @@
+"""HLO cost roll-up with while-loop trip-count multipliers.
+
+XLA's built-in ``HloCostAnalysis`` (exposed as ``compiled.cost_analysis()``)
+visits every computation ONCE — a scan-over-layers body, which is where
+~all FLOPs live, is counted a single time.  This module parses the
+post-optimization, post-SPMD HLO text and rolls up:
+
+  * dot FLOPs        2 * prod(output dims) * prod(contracting dims)
+  * elementwise FLOPs ~ prod(output dims) per arithmetic op
+  * memory bytes     operand + result bytes of top-level (post-fusion)
+                     instructions — fusion bodies are compute-only
+  * collective bytes per collective kind (raw result bytes and ring-wire
+                     estimates)
+
+multiplied through the call graph: while bodies x trip count (parsed from
+the loop-condition constant), fusions/calls x1, conditionals x max-branch.
+Shapes in the partitioned module are per-device shards, so every number is
+per-device; multiply by device count for machine totals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"(\([^)]*\)|\w+\[[\d,]*\](?:\{[^}]*\})?|\w+\[\])\s*"
+    r"([\w\-]+)\(")
+_OPERAND_NAME_RE = re.compile(r"%([\w\.\-]+)")
+_ATTR_COMP_RE = {
+    "body": re.compile(r"body=%?([\w\.\-]+)"),
+    "condition": re.compile(r"condition=%?([\w\.\-]+)"),
+    "calls": re.compile(r"calls=%?([\w\.\-]+)"),
+    "to_apply": re.compile(r"to_apply=%?([\w\.\-]+)"),
+    "branches": re.compile(r"branch_computations=\{([^}]*)\}"),
+}
+_GRP_RE = re.compile(r"replica_groups=\[(\d+)(?:,(\d+))?\]")
+_GRP_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+    "logistic", "cosine", "sine", "select", "compare", "and", "or", "xor",
+    "convert", "floor", "ceil", "round-nearest-afz", "clamp",
+    "exponential-minus-one", "log-plus-one", "atan2", "sign", "erf",
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _TYPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+
+@dataclasses.dataclass
+class Comp:
+    name: str
+    instrs: List[Instr]
+    is_entry: bool = False
+
+
+def split_computations(text: str) -> Tuple[Dict[str, Comp], Optional[str]]:
+    comps: Dict[str, Comp] = {}
+    entry = None
+    cur: Optional[Comp] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = Comp(m.group(2), [], is_entry=bool(m.group(1)))
+                if cur.is_entry:
+                    entry = cur.name
+            continue
+        s = line.strip()
+        if s == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            cur.instrs.append(Instr(m.group(1), m.group(2), m.group(3),
+                                    line))
+    return comps, entry
+
+
+def _group_size(line: str, default: int = 2) -> int:
+    m = _GRP_RE.search(line)
+    if m:
+        return int(m.group(2)) if m.group(2) else int(m.group(1))
+    m = _GRP_EXPLICIT_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclasses.dataclass
+class Cost:
+    dot_flops: float = 0.0
+    elem_flops: float = 0.0
+    mem_bytes: float = 0.0       # operands + outputs (upper bound)
+    mem_bytes_out: float = 0.0   # outputs only (~ buffers materialised)
+    coll_raw: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_wire: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.dot_flops += other.dot_flops * mult
+        self.elem_flops += other.elem_flops * mult
+        self.mem_bytes += other.mem_bytes * mult
+        self.mem_bytes_out += other.mem_bytes_out * mult
+        for d_self, d_other in ((self.coll_raw, other.coll_raw),
+                                (self.coll_wire, other.coll_wire),
+                                (self.coll_counts, other.coll_counts)):
+            for k, v in d_other.items():
+                d_self[k] = d_self.get(k, 0.0) + v * mult
+
+
+class HloCost:
+    """Roll-up engine over one HLO module's text."""
+
+    def __init__(self, text: str):
+        self.comps, self.entry = split_computations(text)
+        self._fusion_bodies = set()
+        self._trip_cache: Dict[str, int] = {}
+        for comp in self.comps.values():
+            for ins in comp.instrs:
+                if ins.op == "fusion":
+                    m = _ATTR_COMP_RE["calls"].search(ins.line)
+                    if m:
+                        self._fusion_bodies.add(m.group(1))
+        self._memo: Dict[Tuple[str, bool], Cost] = {}
+
+    # -- trip counts ---------------------------------------------------------
+    def trip_count(self, cond_name: str) -> int:
+        if cond_name in self._trip_cache:
+            return self._trip_cache[cond_name]
+        comp = self.comps.get(cond_name)
+        trip = 1
+        if comp is not None:
+            consts = [int(x) for ins in comp.instrs
+                      for x in _CONST_RE.findall(ins.line)]
+            if consts:
+                trip = max(consts)
+        self._trip_cache[cond_name] = max(trip, 1)
+        return self._trip_cache[cond_name]
+
+    # -- per-computation -----------------------------------------------------
+    def comp_cost(self, name: str, in_fusion: bool) -> Cost:
+        key = (name, in_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost()
+        comp = self.comps.get(name)
+        if comp is None:
+            self._memo[key] = total
+            return total
+        symtab = {ins.name: ins.type_str for ins in comp.instrs}
+        for ins in comp.instrs:
+            op = ins.op
+            out_elems = _shape_elems(ins.type_str)
+            out_bytes = _shape_bytes(ins.type_str)
+            if op == "dot":
+                k = self._dot_contract_elems(ins, symtab)
+                total.dot_flops += 2.0 * out_elems * k
+            elif op in ("convolution",):
+                total.dot_flops += 2.0 * out_elems  # lower bound
+            elif op in _ELEMENTWISE:
+                total.elem_flops += out_elems
+            elif op.startswith(_COLLECTIVES):
+                base = op
+                for c in _COLLECTIVES:
+                    if op.startswith(c):
+                        base = c
+                        break
+                if op.endswith("-done"):
+                    continue
+                nbytes = out_bytes
+                if op.endswith("-start") and base == "all-reduce":
+                    nbytes //= 2
+                g = _group_size(ins.line)
+                if base == "all-reduce":
+                    w = 2 * nbytes * (g - 1) / g
+                elif base in ("all-gather", "all-to-all",
+                              "ragged-all-to-all"):
+                    w = nbytes * (g - 1) / g
+                elif base == "reduce-scatter":
+                    w = nbytes * (g - 1)
+                else:
+                    w = nbytes
+                total.coll_raw[base] = total.coll_raw.get(base, 0) + nbytes
+                total.coll_wire[base] = total.coll_wire.get(base, 0) + w
+                total.coll_counts[base] = total.coll_counts.get(base, 0) + 1
+
+            # memory traffic: only at top (post-fusion) level
+            if not in_fusion and op not in ("parameter", "constant",
+                                            "get-tuple-element", "tuple",
+                                            "bitcast", "while", "call",
+                                            "conditional"):
+                opers = 0
+                args = ins.line[ins.line.find("(") + 1:]
+                for nm in _OPERAND_NAME_RE.findall(args):
+                    if nm in symtab:
+                        opers += _shape_bytes(symtab[nm])
+                total.mem_bytes += out_bytes + opers
+                total.mem_bytes_out += out_bytes
+
+            # control flow / nested computations
+            if op == "while":
+                body = _ATTR_COMP_RE["body"].search(ins.line)
+                cond = _ATTR_COMP_RE["condition"].search(ins.line)
+                trip = self.trip_count(cond.group(1)) if cond else 1
+                if body:
+                    total.add(self.comp_cost(body.group(1), in_fusion), trip)
+            elif op == "fusion":
+                m = _ATTR_COMP_RE["calls"].search(ins.line)
+                if m:
+                    total.add(self.comp_cost(m.group(1), True), 1.0)
+            elif op == "call":
+                m = _ATTR_COMP_RE["to_apply"].search(ins.line)
+                if m:
+                    total.add(self.comp_cost(m.group(1), in_fusion), 1.0)
+            elif op == "conditional":
+                m = _ATTR_COMP_RE["branches"].search(ins.line)
+                if m:
+                    branches = _OPERAND_NAME_RE.findall(m.group(1))
+                    costs = [self.comp_cost(b, in_fusion) for b in branches]
+                    if costs:
+                        best = max(costs, key=lambda c: c.dot_flops
+                                   + c.elem_flops)
+                        total.add(best, 1.0)
+        self._memo[key] = total
+        return total
+
+    def _dot_contract_elems(self, ins: Instr, symtab) -> int:
+        m = _DOT_CONTRACT_RE.search(ins.line)
+        args = ins.line[ins.line.find("(") + 1:]
+        names = _OPERAND_NAME_RE.findall(args)
+        if not m or not names or names[0] not in symtab:
+            return 1
+        lhs_dims = []
+        tm = _TYPE_RE.search(symtab[names[0]])
+        if tm:
+            lhs_dims = [int(d) for d in tm.group(2).split(",") if d]
+        k = 1
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                k *= lhs_dims[int(idx)]
+        return k
+
+    # -- public --------------------------------------------------------------
+    def total(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.comp_cost(self.entry, False)
+
+
+def analyze(hlo_text: str) -> dict:
+    cost = HloCost(hlo_text).total()
+    return {
+        "dot_flops": cost.dot_flops,
+        "elem_flops": cost.elem_flops,
+        "flops": cost.dot_flops + cost.elem_flops,
+        "mem_bytes": cost.mem_bytes,
+        "mem_bytes_out": cost.mem_bytes_out,
+        "collectives_raw": {k: v for k, v in sorted(cost.coll_raw.items())},
+        "collectives_wire": {k: v for k, v in sorted(cost.coll_wire.items())},
+        "collective_counts": {k: v for k, v in
+                              sorted(cost.coll_counts.items())},
+        "collective_raw_total": sum(cost.coll_raw.values()),
+        "collective_wire_total": sum(cost.coll_wire.values()),
+    }

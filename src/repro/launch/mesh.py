@@ -1,0 +1,18 @@
+"""Production meshes.  A FUNCTION (not module constant) so importing never
+touches jax device state — required by the dry-run contract."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod (v5e); multi_pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host actually has (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

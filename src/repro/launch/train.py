@@ -1,0 +1,92 @@
+"""Production training launcher.
+
+On a real TPU pod this process runs once per host: ``jax.distributed`` is
+initialised from the pod runtime environment, the production mesh spans
+all chips, and the EDAT runtime (one rank per host, pluggable transport)
+coordinates data prefetch / checkpointing / analytics / failure recovery
+around the pjit-sharded train_step.  In this CPU container it runs the
+same code path on whatever devices exist (use --dry-run to lower against
+the full production mesh instead of executing).
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b \
+      --shape train_4k --dry-run               # lower+compile, no exec
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --steps 4 \
+      --reduced                                # actually step on this host
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower + compile against the production mesh")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced config (CPU-executable)")
+    ap.add_argument("--steps", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--distributed-init", action="store_true",
+                    help="call jax.distributed.initialize() (real pods)")
+    args = ap.parse_args(argv)
+
+    if args.dry_run:
+        # delegated to the dry-run driver (sets XLA device-count flags
+        # before importing jax — must run in a fresh interpreter)
+        import subprocess
+        import sys
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", args.shape]
+        if args.multi_pod:
+            cmd.append("--multi-pod")
+        return subprocess.call(cmd)
+
+    if args.distributed_init:
+        import jax
+        jax.distributed.initialize()
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import ARCHS, reduce_cfg
+    from repro.data import DataCfg, SyntheticLM
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import build_model
+    from repro.optim import OptCfg, make_optimizer
+    from repro.train import make_train_step
+
+    spec = ARCHS[args.arch]
+    cfg = reduce_cfg(spec.cfg) if args.reduced else spec.cfg
+    if cfg.frontend != "none" or cfg.encdec:
+        cfg = cfg.replace(frontend="none", n_frontend_tokens=0,
+                          encdec=False)
+    model = build_model(cfg)
+    opt = make_optimizer(OptCfg())
+    step_fn = jax.jit(make_train_step(model, opt))
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    data = SyntheticLM(DataCfg(vocab=cfg.vocab, seq=args.seq,
+                               global_batch=args.batch))
+    n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    print(f"{args.arch}: {n/1e6:.1f}M params on "
+          f"{len(jax.devices())} device(s)")
+    for i in range(args.steps):
+        b = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        t0 = time.monotonic()
+        params, opt_state, m = step_fn(params, opt_state, b,
+                                       jnp.asarray(i))
+        dt = time.monotonic() - t0
+        print(f"  step {i}: loss={float(m['loss']):.4f} "
+              f"({dt:.2f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

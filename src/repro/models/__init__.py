@@ -1,0 +1,12 @@
+"""Model zoo: composable decoder-only / enc-dec transformers in pure JAX."""
+from .config import MLACfg, ModelCfg, MoECfg, RGLRUCfg, SSMCfg
+from .encdec import EncDecLM
+from .lm import TransformerLM, build_segments
+
+
+def build_model(cfg: ModelCfg):
+    return EncDecLM(cfg) if cfg.encdec else TransformerLM(cfg)
+
+
+__all__ = ["ModelCfg", "MoECfg", "MLACfg", "SSMCfg", "RGLRUCfg",
+           "TransformerLM", "EncDecLM", "build_model", "build_segments"]

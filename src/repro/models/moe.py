@@ -1,0 +1,103 @@
+"""Mixture-of-Experts layer (DeepSeek-V3 / Granite-MoE style).
+
+Sort-based capacity dispatch: token→expert assignments are sorted by expert
+id and scattered into an (E, C, d) table with gather/scatter *indices* — no
+(T, E, C) one-hot einsum, so the dispatch memory is O(E·C·d), not O(T·E·C).
+Experts are sharded over the 'model' mesh axis (expert parallelism); GSPMD
+turns the gathers into the dispatch all-to-alls.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import P
+from .config import ModelCfg
+from repro.sharding.ctx import constrain
+
+
+def moe_specs(cfg: ModelCfg) -> Dict[str, P]:
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_expert, m.n_experts
+    sp = {
+        "router": P((d, E), ("embed", "expert"), scale=d ** -0.5),
+        "wg": P((E, d, f), ("expert", "embed", "moe_mlp")),
+        "wu": P((E, d, f), ("expert", "embed", "moe_mlp")),
+        "wd": P((E, f, d), ("expert", "moe_mlp", "embed")),
+    }
+    if m.router_scale:  # DeepSeek aux-loss-free bias
+        sp["router_bias"] = P((E,), ("expert",), "zeros", dtype=jnp.float32)
+    if m.n_shared:
+        fs = m.d_expert * m.n_shared
+        sp["shared_wg"] = P((d, fs), ("embed", "mlp"))
+        sp["shared_wu"] = P((d, fs), ("embed", "mlp"))
+        sp["shared_wd"] = P((fs, d), ("mlp", "embed"))
+    return sp
+
+
+def moe_apply(p, x, *, cfg: ModelCfg) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_load_balance_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = m.n_experts, m.top_k
+    xf = x.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xf, p["router"],
+                        preferred_element_type=jnp.float32)
+    if m.router_scale:            # DeepSeek-V3: sigmoid affinity + bias
+        affin = jax.nn.sigmoid(logits)
+        gval, gidx = jax.lax.top_k(affin + p["router_bias"], k)
+        gval = jnp.take_along_axis(affin, gidx, axis=1)
+        weights = gval / (jnp.sum(gval, axis=1, keepdims=True) + 1e-20)
+        probs = affin / (jnp.sum(affin, axis=-1, keepdims=True) + 1e-20)
+    else:                         # Granite: softmax router
+        probs = jax.nn.softmax(logits, axis=-1)
+        weights, gidx = jax.lax.top_k(probs, k)
+        weights = weights / (jnp.sum(weights, axis=1, keepdims=True) + 1e-20)
+
+    # load-balance aux loss: E * sum_e f_e * p_e
+    ones = jnp.zeros((T, E), jnp.float32).at[
+        jnp.arange(T)[:, None], gidx].set(1.0)
+    f_e = jnp.mean(ones, axis=0) * E / k
+    p_e = jnp.mean(probs, axis=0)
+    aux = jnp.sum(f_e * p_e) * E / E  # = E * mean(f*p) with f normalised
+
+    # ---- sort-based dispatch --------------------------------------------
+    import math
+    C = int(max(1, math.ceil(T * k / E * m.capacity_factor)))
+    flat_e = gidx.reshape(T * k)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_w = weights.reshape(T * k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    first = jnp.searchsorted(se, se, side="left")
+    pos_in_e = jnp.arange(T * k) - first       # rank within expert run
+    keep = pos_in_e < C
+    slot = jnp.where(keep, se * C + pos_in_e, E * C)  # E*C = drop bin
+
+    table = jnp.full((E * C + 1,), T, jnp.int32).at[slot].set(
+        st.astype(jnp.int32), mode="drop")
+    table = table[:E * C]
+    wtab = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(
+        jnp.where(keep, sw, 0.0), mode="drop")[:E * C]
+
+    xg = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)[table]
+    xg = constrain(xg.reshape(E, C, d), ("expert", "capacity", "embed"))
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xg, p["wg"])) * \
+        jnp.einsum("ecd,edf->ecf", xg, p["wu"])
+    h = constrain(h, ("expert", "capacity", "moe_mlp"))
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wd"])
+    ye = constrain(ye, ("expert", "capacity", "embed"))
+
+    # ---- combine ----------------------------------------------------------
+    yflat = (ye.reshape(E * C, d) * wtab[:, None].astype(ye.dtype))
+    out = jnp.zeros((T + 1, d), ye.dtype).at[table].add(yflat)[:T]
+
+    if m.n_shared:
+        sh = jax.nn.silu(xf @ p["shared_wg"]) * (xf @ p["shared_wu"])
+        out = out + sh @ p["shared_wd"]
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,131 @@
+"""RecurrentGemma recurrent block: conv1d + RG-LRU (Real-Gated LRU).
+
+The RG-LRU diagonal recurrence h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * (i_t*x_t)
+is computed with an associative scan over time in fp32 (the blocked Pallas
+kernel in ``repro.kernels.rglru`` mirrors the same (a, b) composition).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import P, gelu
+from .config import ModelCfg
+
+_C = 8.0  # RG-LRU temperature constant (Griffin paper)
+
+
+def rglru_specs(cfg: ModelCfg) -> Dict[str, P]:
+    d = cfg.d_model
+    w = cfg.rglru.lru_width or d
+    k = cfg.rglru.conv_size
+    bh = cfg.rglru.block_heads
+    sp = {
+        "wy": P((d, w), ("embed", "rec")),
+        "wx": P((d, w), ("embed", "rec")),
+        "conv_w": P((k, w), ("dconv", "rec"), scale=0.5),
+        "conv_b": P((w,), ("rec",), "zeros"),
+        "ba": P((w,), ("rec",), "zeros"),
+        "bi": P((w,), ("rec",), "zeros"),
+        "lam": P((w,), ("rec",), "ones", scale=0.65),  # Λ resonance param
+        "wo": P((w, d), ("rec", "embed")),
+    }
+    if bh:
+        # Griffin-faithful block-diagonal gates; blocks shard over 'model'
+        sp["wa"] = P((bh, w // bh, w // bh), ("ssm_heads", None, None))
+        sp["wi"] = P((bh, w // bh, w // bh), ("ssm_heads", None, None))
+    else:
+        sp["wa"] = P((w, w), ("rec", None))   # dense gates (baseline)
+        sp["wi"] = P((w, w), ("rec", None))
+    return sp
+
+
+def _gates(p, xf, bh: int):
+    """r, i gates: dense or block-diagonal (communication-free under TP)."""
+    if bh:
+        B, T, W = xf.shape
+        xh = xf.reshape(B, T, bh, W // bh)
+        r = jnp.einsum("bthw,hwv->bthv", xh,
+                       p["wa"].astype(jnp.float32)).reshape(B, T, W)
+        i = jnp.einsum("bthw,hwv->bthv", xh,
+                       p["wi"].astype(jnp.float32)).reshape(B, T, W)
+        return (jax.nn.sigmoid(r + p["ba"].astype(jnp.float32)),
+                jax.nn.sigmoid(i + p["bi"].astype(jnp.float32)))
+    r = jax.nn.sigmoid(xf @ p["wa"].astype(jnp.float32)
+                       + p["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["wi"].astype(jnp.float32)
+                       + p["bi"].astype(jnp.float32))
+    return r, i
+
+
+def _rglru_scan(x, r, i, lam, h0=None):
+    """x, r, i: (B, T, W) fp32;  lam: (W,);  h0: (B, W) initial state.
+    Returns h: (B, T, W)."""
+    log_a = -_C * jax.nn.softplus(lam) * r              # (B,T,W) <= 0
+    a = jnp.exp(log_a)
+    gated = i * x
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        # h_t := h_t + (prod_{<=t} a) * h0
+        h = h + a_s * h0[:, None, :]
+    return h
+
+
+def rglru_apply(p, x, *, cfg: ModelCfg,
+                cache: Optional[dict] = None) -> Tuple[jax.Array, Optional[dict]]:
+    B, T, _ = x.shape
+    K = cfg.rglru.conv_size
+    y_gate = gelu(x @ p["wy"])
+    xr = x @ p["wx"]
+
+    if cache is None or T > 1:
+        pad = (jnp.zeros((B, K - 1, xr.shape[-1]), xr.dtype)
+               if cache is None else cache["conv"].astype(xr.dtype))
+        xp = jnp.concatenate([pad, xr], axis=1)
+        conv = sum(xp[:, i:i + T] * p["conv_w"][i] for i in range(K)) \
+            + p["conv_b"]
+        xf = conv.astype(jnp.float32)
+        r, i = _gates(p, xf, cfg.rglru.block_heads)
+        h0 = None if cache is None else cache["h"]
+        lam = p["lam"].astype(jnp.float32)
+        if cfg.attn_impl == "pallas" and h0 is None:
+            from repro.kernels.rglru import ops as rglru_ops
+            if rglru_ops.supported(T, xf.shape[-1]):
+                h = rglru_ops.rglru(xf, r, i, lam)
+            else:
+                h = _rglru_scan(xf, r, i, lam, h0=h0)
+        else:
+            h = _rglru_scan(xf, r, i, lam, h0=h0)
+        new_cache = None if cache is None else \
+            {"conv": xp[:, -(K - 1):], "h": h[:, -1]}
+    else:
+        xp = jnp.concatenate([cache["conv"], xr], axis=1)  # (B,K,W)
+        conv = sum(xp[:, i] * p["conv_w"][i] for i in range(K)) + p["conv_b"]
+        xf = conv.astype(jnp.float32)[:, None]
+        r, i = _gates(p, xf, cfg.rglru.block_heads)
+        log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+        a = jnp.exp(log_a)
+        b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+        h = a * cache["h"][:, None] + b
+        new_cache = {"conv": xp[:, 1:], "h": h[:, 0]}
+
+    out = (h.astype(x.dtype) * y_gate) @ p["wo"]
+    return out, new_cache
+
+
+def rglru_cache_spec(cfg: ModelCfg, batch: int) -> Dict[str, P]:
+    w = cfg.rglru.lru_width or cfg.d_model
+    return {
+        "conv": P((batch, cfg.rglru.conv_size - 1, w),
+                  ("batch", "dconv", "rec"), "zeros"),
+        "h": P((batch, w), ("batch", "rec"), "zeros", dtype=jnp.float32),
+    }

@@ -1,0 +1,13 @@
+"""LR schedules (pure functions of an int32 step)."""
+import jax.numpy as jnp
+
+
+def linear_warmup(step, *, peak, warmup):
+    return peak * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+
+
+def cosine_schedule(step, *, peak, warmup, total, floor=0.1):
+    warm = jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return peak * warm * cos

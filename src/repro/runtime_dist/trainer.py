@@ -1,0 +1,364 @@
+"""Event-driven distributed trainer: EDAT as the coordination layer.
+
+Every JAX host is an EDAT rank (simulated in-proc here; the transport is
+pluggable).  All inter-host interactions are events — the paper's model:
+
+  * ``grad``    gradient exchange (data-parallel all-to-all of grad events;
+                optionally int8-compressed), collected by a quorum
+                collector: K-of-N with a straggler timeout — bounded-
+                staleness async DP; quorum=1.0 == synchronous DP.
+  * ``ckpt``    async checkpointing: the step task fires a snapshot event
+                to a persistent checkpoint task; the write happens on
+                another worker while the next step computes.
+  * ``metric``  in-situ analytics pipeline (MONC pattern, §VI).
+  * RANK_FAILED machine-generated failure event (paper §VII): the leader
+                broadcasts ``recover``; survivors roll back to the last
+                durable checkpoint, re-shard the data stream (elastic),
+                and continue.
+
+The trainer is deliberately pure data-parallel at the EDAT level; inside a
+rank the step is a jitted JAX function (which on a real pod is itself
+pjit-sharded — see launch/).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import edat
+from repro import checkpoint as ckpt_store
+from repro.data import DataCfg, SyntheticLM
+from repro.optim import OptCfg, make_optimizer
+
+
+@dataclasses.dataclass
+class TrainerCfg:
+    steps: int = 20
+    n_ranks: int = 2
+    workers_per_rank: int = 2
+    ckpt_every: int = 10
+    ckpt_dir: Optional[str] = None
+    quorum: float = 1.0          # fraction of alive ranks' grads required
+    collect_timeout: float = 10.0  # straggler bound (s)
+    stale_discount: float = 0.5  # weight applied to late gradient events
+    compress: str = "none"       # none | int8
+    seed: int = 0
+    start_step: int = 0          # resume support
+    # heartbeat failure detector (timer events, paper §VII): 0 = off.
+    # A rank silent for hb_timeout is *suspected*: survivors treat it as
+    # failed (roll back + re-shard); the suspect fences itself on waking.
+    hb_interval: float = 0.0
+    hb_timeout: float = 3.0
+    # test hook: {rank: (step, seconds)} injected stall
+    stall: Optional[Dict[int, tuple]] = None
+
+
+# ------------------------------------------------------- gradient payloads
+def _q8_tree(tree):
+    def q(x):
+        x = np.asarray(x, np.float32)
+        amax = float(np.max(np.abs(x))) + 1e-12
+        return (np.round(x / amax * 127.0).astype(np.int8), amax)
+    return jax.tree.map(q, tree)
+
+
+def _dq8_tree(tree):
+    def dq(leaf):
+        q, amax = leaf
+        return q.astype(np.float32) * (amax / 127.0)
+    return jax.tree.map(dq, tree, is_leaf=lambda x: isinstance(x, tuple)
+                        and len(x) == 2 and isinstance(x[1], float))
+
+
+class _RankState:
+    def __init__(self, rank):
+        self.rank = rank
+        self.params = None
+        self.opt_state = None
+        self.step = 0
+        self.epoch = 0            # bumped on every recovery
+        self.alive: List[int] = []
+        self.done = False
+        self.hb_mute = False      # test hook: simulated hang
+        self.stale_used = 0
+        self.timeouts = 0
+
+
+class EventDrivenTrainer:
+    def __init__(self, model, data_cfg: DataCfg, opt_cfg: OptCfg,
+                 cfg: TrainerCfg):
+        self.model = model
+        self.data = SyntheticLM(data_cfg)
+        self.opt = make_optimizer(opt_cfg)
+        self.cfg = cfg
+        self.history: List[Dict[str, Any]] = []
+        self._hist_mu = threading.Lock()
+        self.states = [_RankState(r) for r in range(cfg.n_ranks)]
+        self.runtime: Optional[edat.Runtime] = None
+        self.ckpt_writes = 0
+
+        # jitted per-host functions (shared across rank threads)
+        def loss_fn(p, batch):
+            loss, m = model.loss(p, batch)
+            return loss, m
+
+        self._grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+
+        def apply_fn(params, opt_state, grads, step):
+            return self.opt.update(grads, opt_state, params, step)
+
+        self._apply_fn = jax.jit(apply_fn)
+
+    # ----------------------------------------------------------- event glue
+    def _pack_grads(self, grads):
+        host = jax.tree.map(np.asarray, grads)
+        if self.cfg.compress == "int8":
+            return _q8_tree(host)
+        return host
+
+    def _unpack_grads(self, payload):
+        if self.cfg.compress == "int8":
+            return _dq8_tree(payload)
+        return payload
+
+    # ------------------------------------------------------------ main SPMD
+    def run(self, timeout: float = 300.0) -> Dict[str, Any]:
+        cfg = self.cfg
+        rt = edat.Runtime(cfg.n_ranks, workers_per_rank=cfg.workers_per_rank,
+                          unconsumed="ignore")
+        self.runtime = rt
+        rt.run(self._main, timeout=timeout)
+        return {
+            "history": sorted(self.history, key=lambda m: m["step"]),
+            "final_params": [s.params for s in self.states],
+            "stale_used": sum(s.stale_used for s in self.states),
+            "timeouts": sum(s.timeouts for s in self.states),
+            "ckpt_writes": self.ckpt_writes,
+        }
+
+    def _init_state(self, st: _RankState):
+        cfg = self.cfg
+        st.params = self.model.init(jax.random.PRNGKey(cfg.seed))
+        st.opt_state = self.opt.init(st.params)
+        st.step = cfg.start_step
+        st.alive = list(range(cfg.n_ranks))
+        if cfg.ckpt_dir and cfg.start_step > 0:
+            proto = {"params": st.params, "opt": st.opt_state}
+            step, tree, _ = ckpt_store.restore(cfg.ckpt_dir, proto)
+            st.params = jax.tree.map(jnp.asarray, tree["params"])
+            st.opt_state = jax.tree.map(jnp.asarray, tree["opt"])
+            st.step = step
+
+    def _main(self, ctx: edat.Context):
+        cfg = self.cfg
+        st = self.states[ctx.rank]
+        self._init_state(st)
+
+        # persistent tasks: the step engine, failure handling, recovery
+        ctx.submit_persistent(self._step_task, deps=[(edat.SELF, "go")],
+                              name="step")
+        ctx.submit_persistent(self._on_rank_failed,
+                              deps=[(edat.ANY, edat.RANK_FAILED)],
+                              name="faildet")
+        ctx.submit_persistent(self._on_recover, deps=[(edat.ANY, "recover")],
+                              name="recover")
+        if ctx.rank == 0:
+            ctx.submit_persistent(self._metric_task,
+                                  deps=[(edat.ANY, "metric")], name="metrics")
+            if cfg.ckpt_dir:
+                ctx.submit_persistent(self._ckpt_task,
+                                      deps=[(edat.SELF, "ckpt")], name="ckpt")
+            if cfg.hb_interval > 0:
+                self._hb_seen = {r: time.monotonic()
+                                 for r in range(cfg.n_ranks)}
+                self._hb_done: set = set()
+                ctx.submit_persistent(self._hb_monitor,
+                                      deps=[(edat.SELF, "__hbtick")],
+                                      name="hbmon")
+                ctx.fire_after(cfg.hb_interval, edat.SELF, "__hbtick")
+        if cfg.hb_interval > 0:
+            ctx.submit_persistent(self._on_suspect,
+                                  deps=[(edat.ANY, "suspect")],
+                                  name="suspect")
+            # heartbeat pump: timer-driven, independent of the step task
+            # (a jit compile or long step must NOT look like a hang)
+            ctx.submit_persistent(self._hb_pump,
+                                  deps=[(edat.SELF, "__hbself")],
+                                  name="hbpump")
+            ctx.fire_after(cfg.hb_interval / 2, edat.SELF, "__hbself")
+        # durable initial checkpoint: the recovery anchor
+        if ctx.rank == 0 and cfg.ckpt_dir and cfg.start_step == 0:
+            snap = {"params": jax.tree.map(np.asarray, st.params),
+                    "opt": jax.tree.map(np.asarray, st.opt_state)}
+            ckpt_store.save(cfg.ckpt_dir, st.step, snap)
+        ctx.fire(edat.SELF, "go")
+
+    # ---------------------------------------------------------------- tasks
+    def _step_task(self, ctx: edat.Context, events):
+        cfg = self.cfg
+        st = self.states[ctx.rank]
+        if st.done or self.runtime.is_dead(ctx.rank):
+            return
+        if cfg.stall and ctx.rank in cfg.stall:
+            at, secs = cfg.stall[ctx.rank]
+            if st.step == at:
+                st.hb_mute = True    # a true hang silences the pump too
+                time.sleep(secs)     # injected hang (straggler simulation)
+                st.hb_mute = False
+        epoch = st.epoch
+        alive = sorted(st.alive)
+        if ctx.rank not in alive:    # fenced while stalled
+            st.done = True
+            return
+        shard = alive.index(ctx.rank)
+        batch = self.data.batch(st.step, shard, len(alive))
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        (loss, metrics), grads = self._grad_fn(st.params, batch)
+
+        payload = {"rank": ctx.rank, "step": st.step, "epoch": epoch,
+                   "grads": self._pack_grads(grads)}
+        ctx.fire(edat.ALL, "grad", payload)
+
+        # K-of-N quorum collection with straggler timeout (async DP)
+        need = max(1, int(np.ceil(cfg.quorum * len(alive))))
+        got: Dict[int, Any] = {}
+        stale: List[Any] = []
+        deadline = time.monotonic() + cfg.collect_timeout
+        while len(got) < need:
+            if st.epoch != epoch or st.done:
+                return  # recovery happened under us: abandon this step
+            evs = ctx.retrieve_any([(edat.ANY, "grad")])
+            for ev in evs:
+                p = ev.data
+                if p["epoch"] != epoch:
+                    continue
+                if p["step"] == st.step:
+                    got[p["rank"]] = self._unpack_grads(p["grads"])
+                elif p["step"] < st.step:
+                    stale.append(self._unpack_grads(p["grads"]))
+            if not evs:
+                if time.monotonic() > deadline:
+                    st.timeouts += 1
+                    break
+                time.sleep(0.002)
+        if ctx.rank not in got:   # own grads must participate
+            got[ctx.rank] = jax.tree.map(np.asarray, grads)
+
+        gsum = None
+        weight = 0.0
+        for g in got.values():
+            gsum = g if gsum is None else jax.tree.map(np.add, gsum, g)
+            weight += 1.0
+        for g in stale:           # bounded staleness: discounted fold-in
+            gsum = jax.tree.map(
+                lambda a, b: a + cfg.stale_discount * b, gsum, g)
+            weight += cfg.stale_discount
+            st.stale_used += 1
+        gavg = jax.tree.map(lambda x: jnp.asarray(x / weight), gsum)
+
+        st.params, st.opt_state, om = self._apply_fn(
+            st.params, st.opt_state, gavg, jnp.asarray(st.step))
+        st.step += 1
+
+        ctx.fire(0, "metric", {"rank": ctx.rank, "step": st.step,
+                               "loss": float(loss),
+                               "n_grads": len(got), "n_stale": len(stale)})
+        if (cfg.ckpt_dir and ctx.rank == min(alive)
+                and st.step % cfg.ckpt_every == 0):
+            snap = {"params": jax.tree.map(np.asarray, st.params),
+                    "opt": jax.tree.map(np.asarray, st.opt_state)}
+            ctx.fire(0, "ckpt", {"step": st.step, "snap": snap}, ref=True)
+
+        if st.step < cfg.steps:
+            ctx.fire(edat.SELF, "go")
+        else:
+            st.done = True
+            if cfg.hb_interval > 0:
+                ctx.fire(0, "__hbdone", ctx.rank)
+
+    def _ckpt_task(self, ctx: edat.Context, events):
+        p = events[0].data
+        ckpt_store.save(self.cfg.ckpt_dir, p["step"], p["snap"])
+        self.ckpt_writes += 1
+
+    def _metric_task(self, ctx: edat.Context, events):
+        with self._hist_mu:
+            self.history.append(events[0].data)
+
+    def _hb_pump(self, ctx: edat.Context, events):
+        st = self.states[ctx.rank]
+        if st.done or self.runtime.is_dead(ctx.rank):
+            return                   # stop beating; timer chain ends
+        if not st.hb_mute:
+            ctx.fire(0, "hb", ctx.rank)
+        ctx.fire_after(self.cfg.hb_interval / 2, edat.SELF, "__hbself")
+
+    def _hb_monitor(self, ctx: edat.Context, events):
+        """Timer-driven failure detector on rank 0 (paper §VII: machine
+        generated events drive tasks)."""
+        cfg = self.cfg
+        st = self.states[ctx.rank]
+        now = time.monotonic()
+        for ev in ctx.retrieve_any([(edat.ANY, "hb")] * (4 * cfg.n_ranks)):
+            self._hb_seen[ev.data] = now
+        for ev in ctx.retrieve_any([(edat.ANY, "__hbdone")] * cfg.n_ranks):
+            self._hb_done.add(ev.data)
+        suspects = [r for r in sorted(st.alive)
+                    if r not in self._hb_done
+                    and now - self._hb_seen.get(r, now) > cfg.hb_timeout]
+        for r in suspects:
+            ctx.fire(edat.ALL, "suspect", r)
+        active = [r for r in st.alive
+                  if r not in self._hb_done and r not in suspects
+                  and not self.states[r].done
+                  and not self.runtime.is_dead(r)]
+        if active:
+            ctx.fire_after(cfg.hb_interval, edat.SELF, "__hbtick")
+
+    def _on_suspect(self, ctx: edat.Context, events):
+        suspected = events[0].data
+        st = self.states[ctx.rank]
+        if suspected == ctx.rank:
+            st.done = True          # fence myself: fail-stop enforcement
+            return
+        if suspected in st.alive:
+            st.alive.remove(suspected)
+            if ctx.rank == 0:
+                self._hb_done.add(suspected)
+            if ctx.rank == min(st.alive) and self.cfg.ckpt_dir:
+                step = ckpt_store.latest_step(self.cfg.ckpt_dir) or 0
+                ctx.fire(edat.ALL, "recover", {"step": step})
+
+    def _on_rank_failed(self, ctx: edat.Context, events):
+        st = self.states[ctx.rank]
+        dead = events[0].data
+        if dead in st.alive:
+            st.alive.remove(dead)
+        # leader triggers a coordinated rollback to the last durable ckpt
+        if ctx.rank == min(st.alive) and self.cfg.ckpt_dir:
+            step = ckpt_store.latest_step(self.cfg.ckpt_dir) or 0
+            ctx.fire(edat.ALL, "recover", {"step": step})
+
+    def _on_recover(self, ctx: edat.Context, events):
+        st = self.states[ctx.rank]
+        if self.runtime.is_dead(ctx.rank) or st.done:
+            return
+        info = events[0].data
+        cfg = self.cfg
+        proto = {"params": st.params, "opt": st.opt_state}
+        try:
+            step, tree, _ = ckpt_store.restore(cfg.ckpt_dir, proto,
+                                               step=info["step"])
+        except FileNotFoundError:
+            return
+        st.params = jax.tree.map(jnp.asarray, tree["params"])
+        st.opt_state = jax.tree.map(jnp.asarray, tree["opt"])
+        st.step = step
+        st.epoch += 1            # invalidates in-flight grads
+        ctx.fire(edat.SELF, "go")

@@ -1,0 +1,78 @@
+"""Graph500 BFS + in-situ analytics correctness (incl. hypothesis property
+test of EDAT BFS against networkx on random graphs)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analytics import BespokeAnalytics, EdatAnalytics, InsituCfg
+from repro.graph import (EdatBFS, ReferenceBFS, build_csr, kronecker_edges,
+                         validate_bfs_tree)
+
+
+def test_kronecker_shapes():
+    e = kronecker_edges(8, 16, seed=3)
+    assert e.shape == (2, (1 << 8) * 16)
+    assert e.max() < (1 << 8)
+
+
+@pytest.mark.parametrize("ranks", [1, 2, 4])
+def test_edat_bfs_matches_reference_reach(ranks):
+    edges = kronecker_edges(9, 8, seed=5)
+    n = 1 << 9
+    csr = build_csr(edges, n, ranks)
+    deg = np.bincount(np.concatenate([edges[0], edges[1]]), minlength=n)
+    root = int(np.where(deg > 0)[0][0])
+    pe = EdatBFS(csr).run(root)
+    pr = ReferenceBFS(csr).run(root)
+    assert ((pe >= 0) == (pr >= 0)).all()       # identical reachable set
+    assert validate_bfs_tree(edges, pe, root)
+    assert validate_bfs_tree(edges, pr, root)
+
+
+@given(st.integers(10, 400), st.integers(0, 10_000), st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_edat_bfs_vs_networkx(n_edges, seed, ranks):
+    import networkx as nx
+    rng = np.random.default_rng(seed)
+    n = 64
+    edges = rng.integers(0, n, size=(2, n_edges)).astype(np.int64)
+    csr = build_csr(edges, n, ranks)
+    g = nx.Graph()
+    g.add_nodes_from(range(n))
+    g.add_edges_from(edges.T.tolist())
+    g.remove_edges_from(nx.selfloop_edges(g))
+    root = int(edges[0][0]) if edges[0][0] != edges[1][0] else int(
+        edges[0][0])
+    parent = EdatBFS(csr).run(root)
+    reach_nx = set(nx.node_connected_component(g, root)) \
+        if g.degree(root) > 0 or True else {root}
+    reach = set(np.where(parent >= 0)[0].tolist())
+    assert reach == reach_nx
+    assert validate_bfs_tree(edges, parent, root)
+    # BFS levels must match networkx shortest path lengths
+    dist = nx.single_source_shortest_path_length(g, root)
+    level = {root: 0}
+    # derive levels from parent pointers
+    def lvl(v, seen=()):
+        if v in level:
+            return level[v]
+        level[v] = lvl(int(parent[v])) + 1
+        return level[v]
+    for v in reach:
+        assert lvl(v) == dist[v], (v, lvl(v), dist[v])
+
+
+def test_insitu_edat_results_correct():
+    cfg = InsituCfg(n_analytics=2, items_per_producer=20, field_elems=64,
+                    n_fields=2)
+    res = EdatAnalytics(cfg).run()
+    # every (field, timestep) must be reduced exactly once
+    assert res["results"] == cfg.items_per_producer
+    assert res["mean_latency_s"] > 0
+
+
+def test_insitu_bespoke_results_correct():
+    cfg = InsituCfg(n_analytics=2, items_per_producer=20, field_elems=64,
+                    n_fields=2)
+    res = BespokeAnalytics(cfg).run()
+    assert res["results"] == cfg.items_per_producer

@@ -1,0 +1,66 @@
+"""Collective-pattern helpers: barrier, allreduce, tree_reduce."""
+import threading
+
+import pytest
+
+from repro import edat
+from repro.core import patterns
+
+
+def run(n, main, **kw):
+    rt = edat.Runtime(n, workers_per_rank=2, **kw)
+    rt.run(main, timeout=60)
+    return rt
+
+
+def test_barrier_runs_once_per_rank():
+    hits = []
+
+    def main(ctx):
+        patterns.barrier(ctx, "b1", lambda c, e: hits.append(c.rank))
+
+    run(3, main)
+    assert sorted(hits) == [0, 1, 2]
+
+
+def test_wait_barrier_orders():
+    import time
+    stamps = {}
+
+    def t(ctx, events):
+        time.sleep(0.02 * ctx.rank)
+        patterns.wait_barrier(ctx, "x")
+        stamps[ctx.rank] = time.monotonic()
+
+    def main(ctx):
+        ctx.submit(t)
+
+    run(3, main)
+    assert max(stamps.values()) - min(stamps.values()) < 0.5
+
+
+def test_allreduce_sum():
+    out = {}
+    mu = threading.Lock()
+
+    def main(ctx):
+        patterns.allreduce(
+            ctx, "s", ctx.rank + 1, lambda a, b: a + b,
+            lambda c, v: out.__setitem__(c.rank, v))
+
+    run(4, main)
+    assert out == {0: 10, 1: 10, 2: 10, 3: 10}
+
+
+@pytest.mark.parametrize("n,root", [(1, 0), (2, 0), (3, 1), (4, 0), (5, 3),
+                                    (8, 7)])
+def test_tree_reduce(n, root):
+    out = {}
+
+    def main(ctx):
+        patterns.tree_reduce(
+            ctx, "t", ctx.rank + 1, lambda a, b: a + b,
+            lambda c, v: out.__setitem__(c.rank, v), root=root)
+
+    run(n, main, unconsumed="error")
+    assert out == {root: n * (n + 1) // 2}
