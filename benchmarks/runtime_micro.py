@@ -2,15 +2,18 @@
 with the scheduling of tasks and managing of dependencies"):
 
   * task throughput: zero-dependency tasks/second;
-  * event throughput: rank-to-rank small-event rate;
+  * event throughput: rank-to-rank small-event rate (single + batched fire);
   * event latency: ping-pong round-trip / 2;
   * persistent-task dispatch rate;
-  * progress-mode comparison (dedicated thread vs idle-worker polling).
+  * progress-mode comparison (dedicated thread vs idle-worker polling);
+  * many-consumer routing: N persistent tasks with distinct eids — linear in
+    N through the indexed router (was quadratic with the linear scan).
 """
 from __future__ import annotations
 
 import json
 import os
+import sys
 import time
 
 from repro import edat
@@ -79,15 +82,70 @@ def _pingpong_latency(n_iters=500):
     return dt / (2 * n_iters)   # one-way latency
 
 
+def _events_per_s_batch(n_events=2000):
+    """Like _events_per_s but the producer uses one fire_batch call."""
+    got = []
+
+    def sink(ctx, events):
+        got.append(None)
+
+    def main(ctx):
+        if ctx.rank == 0:
+            ctx.submit_persistent(sink, deps=[(1, "e")])
+        else:
+            ctx.fire_batch([(0, "e", i) for i in range(n_events)])
+
+    rt = edat.Runtime(2, workers_per_rank=1)
+    t0 = time.monotonic()
+    rt.run(main, timeout=120)
+    dt = time.monotonic() - t0
+    assert len(got) == n_events
+    return n_events / dt
+
+
+def _routing_events_per_s(n_consumers, events_per=2):
+    """N persistent tasks with N distinct eids; every event must be routed
+    to exactly one of them.  Per-event cost is O(1) through the indexed
+    router; the seed's linear scan made the whole run quadratic in N."""
+    got = []
+
+    def sink(ctx, events):
+        got.append(None)
+
+    def main(ctx):
+        if ctx.rank == 0:
+            for i in range(n_consumers):
+                ctx.submit_persistent(sink, deps=[(1, f"e{i}")])
+        else:
+            for _ in range(events_per):
+                for i in range(n_consumers):
+                    ctx.fire(0, f"e{i}", i)
+
+    rt = edat.Runtime(2, workers_per_rank=1)
+    t0 = time.monotonic()
+    rt.run(main, timeout=240)
+    dt = time.monotonic() - t0
+    n = n_consumers * events_per
+    assert len(got) == n
+    return n / dt
+
+
 def run(out: str = None):
+    r250 = _routing_events_per_s(250)
+    r1000 = _routing_events_per_s(1000)
     res = {
         "tasks_per_s": _tasks_per_s(),
         "events_per_s_thread": _events_per_s(progress="thread"),
         "events_per_s_workerpoll": _events_per_s(progress="worker"),
+        "events_per_s_batch": _events_per_s_batch(),
         "event_latency_us": _pingpong_latency() * 1e6,
+        "routing_events_per_s_250": r250,
+        "routing_events_per_s_1000": r1000,
+        # ~1.0 when routing is linear in consumer count; << 1 when quadratic
+        "routing_scaling_1000_vs_250": r1000 / r250,
     }
     for k, v in res.items():
-        print(f"  micro {k} = {v:.1f}")
+        print(f"  micro {k} = {v:.1f}" if v >= 10 else f"  micro {k} = {v:.3f}")
     if out:
         os.makedirs(os.path.dirname(out), exist_ok=True)
         with open(out, "w") as f:
@@ -96,4 +154,4 @@ def run(out: str = None):
 
 
 if __name__ == "__main__":
-    run()
+    run(out=sys.argv[1] if len(sys.argv) > 1 else None)

@@ -15,6 +15,7 @@ Public API::
     rt.run(main)
 """
 from .event import ALL, ANY, SELF, RANK_FAILED, Dep, Event, dep
+from .router import EventRouter
 from .runtime import (Context, EdatDeadlockError, EdatTaskError, Runtime,
                       TimerHandle)
 from .scheduler import Scheduler
@@ -23,5 +24,5 @@ from .transport import InProcTransport, Message, Transport
 __all__ = [
     "ALL", "ANY", "SELF", "RANK_FAILED", "Dep", "Event", "dep",
     "Context", "Runtime", "EdatDeadlockError", "EdatTaskError", "TimerHandle",
-    "Scheduler", "InProcTransport", "Message", "Transport",
+    "Scheduler", "EventRouter", "InProcTransport", "Message", "Transport",
 ]

@@ -116,10 +116,26 @@ class Dep:
 
     ``source`` is an int rank, :data:`ANY`, :data:`ALL` or :data:`SELF`
     (resolved to the submitting rank at submission time).
+
+    After wildcard expansion (SELF resolved, ALL expanded per-rank) a dep is
+    either *exact* — indexable under the stable ``key`` ``(source, eid)`` —
+    or an ANY-source *wildcard*, indexable under ``eid`` alone.  The event
+    router uses this split to route deliveries without scanning every
+    registered consumer.
     """
 
     source: Any
     eid: str
+
+    @property
+    def key(self) -> tuple:
+        """Stable index key for exact deps: ``(source, eid)``."""
+        return (self.source, self.eid)
+
+    @property
+    def is_any(self) -> bool:
+        """True for an ANY-source wildcard dep (matches every source)."""
+        return self.source is ANY
 
     def matches(self, ev: Event) -> bool:
         if self.eid != ev.eid:

@@ -39,7 +39,8 @@ def allreduce(ctx: Context, name: str, value: Any, combine: Callable,
         on_result(ctx2, acc)
 
     ctx.submit(task, deps=[(ALL, f"__ar.{name}")])
-    ctx.fire(ALL, f"__ar.{name}", value)
+    # one batched fire: a single transport round-trip per destination
+    ctx.fire_batch([(r, f"__ar.{name}", value) for r in range(ctx.n_ranks)])
 
 
 def tree_reduce(ctx: Context, name: str, value: Any, combine: Callable,

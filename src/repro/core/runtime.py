@@ -6,6 +6,12 @@ dedicated progress thread per rank, or idle-worker polling — both modes of
 paper §II.F), and detects global termination with a Mattern-style
 four-counter quiescence check driven through the transport itself.
 
+Termination detection is *wakeup-driven*: schedulers poke an activity epoch
+whenever a rank transitions to idle (and on timer/failure state changes),
+and the detector blocks on that epoch instead of sleep-polling.  The
+four-counter logic itself (two consecutive idle polls with globally
+``sent == received`` and empty mailboxes) is unchanged.
+
 Beyond-paper (but anticipated in the paper's §VII "further work"): machine
 generated events — timer events (``fire_after``) and rank-failure events
 (``RANK_FAILED``) — and node-failure injection used by the fault-tolerant
@@ -25,6 +31,7 @@ from .scheduler import Scheduler
 from .transport import CONTROL, EVENT, InProcTransport, Message, Transport
 
 DepLike = Union[Dep, Tuple[Any, str]]
+FireLike = Union[Tuple[Any, str], Tuple[Any, str, Any]]
 
 
 class EdatDeadlockError(RuntimeError):
@@ -44,6 +51,7 @@ class TimerHandle:
         self.tid = tid
 
     def cancel(self) -> bool:
+        """Cancel the timer.  True only if it had not yet fired."""
         return self._rt._cancel_timer(self.tid)
 
 
@@ -63,6 +71,7 @@ class Context:
     ``edatLock/Unlock/TestLock`` ``ctx.lock / ctx.unlock / ctx.test_lock``
     ``EDAT_SELF/ANY/ALL``        ``edat.SELF / edat.ANY / edat.ALL``
     ``EDAT_ADDRESS``             ``ctx.fire(..., ref=True)``
+    (batched fire)               ``ctx.fire_batch([(t, eid, data), ...])``
     ===========================  =======================================
     """
 
@@ -93,6 +102,21 @@ class Context:
             raise ValueError(f"EIDs starting with {SYS_PREFIX!r} are reserved")
         self._rt._fire(self.rank, target, eid, data,
                        persistent=persistent, ref=ref)
+
+    def fire_batch(self, fires: Sequence[FireLike], *,
+                   persistent: bool = False, ref: bool = False) -> None:
+        """Fire many events with one transport round-trip per destination.
+
+        ``fires`` is a sequence of ``(target, eid)`` or ``(target, eid,
+        data)`` tuples; each element has exactly the semantics of a single
+        :meth:`fire` (payload copied at fire time, per-(src,dst) FIFO order
+        preserved across the batch).
+        """
+        for f in fires:
+            if f[1].startswith(SYS_PREFIX):
+                raise ValueError(
+                    f"EIDs starting with {SYS_PREFIX!r} are reserved")
+        self._rt._fire_batch(self.rank, fires, persistent=persistent, ref=ref)
 
     def fire_after(self, delay: float, target: Any, eid: str,
                    data: Any = None) -> TimerHandle:
@@ -133,7 +157,8 @@ class Runtime:
 
     ``progress='thread'`` gives each rank a dedicated progress thread;
     ``progress='worker'`` maps progress polling onto idle workers — the two
-    modes of paper §II.F.
+    modes of paper §II.F.  In worker mode the transport's notify hook wakes
+    an idle worker on message arrival instead of the worker sleep-polling.
     """
 
     def __init__(self, n_ranks: int, workers_per_rank: int = 1, *,
@@ -150,46 +175,113 @@ class Runtime:
         self._ctxs = [Context(self, r) for r in range(n_ranks)]
         self._progress_mode = progress
         self._unconsumed = unconsumed
-        self._poll_interval = poll_interval
+        # retained as the detector's backstop wait cap (the detector is
+        # normally woken by idle-transition pokes, not by this interval)
+        self._poll_interval = max(poll_interval, 0.25)
         self._prog_threads: List[threading.Thread] = []
         self._main_threads: List[threading.Thread] = []
         self._shutdown = False
         self._error: Optional[BaseException] = None
         self._err_mu = threading.Lock()
+        # activity epoch: bumped on every idle transition / timer change;
+        # the termination detector blocks on it instead of sleep-polling
+        self._quiet_cv = threading.Condition()
+        self._epoch = 0
         # timers
         self._timers: List[Tuple[float, int, int, int, str, Any]] = []
         self._timer_ids = itertools.count()
+        self._live_tids: set = set()   # scheduled and not yet fired/cancelled
         self._cancelled: set = set()
         self._timer_cv = threading.Condition()
         self._timer_thread: Optional[threading.Thread] = None
         self._pending_timers = 0
         self.stats: Dict[str, Any] = {}
+        if (progress == "worker"
+                and type(self.transport).set_notify
+                is not Transport.set_notify):
+            # the transport can wake idle workers on arrival; without a real
+            # notify override the workers fall back to timed polling
+            for r in range(n_ranks):
+                self.transport.set_notify(r, self._sched[r]._notify_mail)
+                self._sched[r]._mail_hooked = True
+
+    # --------------------------------------------------------------- wakeups
+    def _poke(self, force: bool = False) -> None:
+        """Bump the activity epoch and wake the termination detector.
+
+        Unless forced, the wake is suppressed while the cheap quiescence
+        gate fails — a busy system pokes on every idle transition (e.g.
+        twice per ping-pong hop) and waking the detector each time would put
+        context switches on the message critical path.  A suppressed wake
+        that raced the real final transition is recovered by the detector's
+        backstop timeout."""
+        if not force and not self._maybe_quiescent():
+            return
+        with self._quiet_cv:
+            self._epoch += 1
+            self._quiet_cv.notify_all()
 
     # ------------------------------------------------------------ event path
+    def _targets(self, src: int, target: Any) -> List[int]:
+        """Expand a fire target; reject out-of-range ranks *before* any
+        counter is touched (a post-count failure would permanently
+        unbalance the Mattern sent/received counters and hang run())."""
+        if target is ALL:
+            return list(range(self.n_ranks))
+        if target is SELF:
+            return [src]
+        t = int(target)
+        if not 0 <= t < self.n_ranks:
+            raise ValueError(
+                f"fire target rank {t} out of range [0, {self.n_ranks})")
+        return [t]
+
     def _fire(self, src: int, target: Any, eid: str, data: Any, *,
               persistent: bool, ref: bool) -> None:
         payload = data if ref else copy_payload(data)
-        if target is ALL:
-            targets = list(range(self.n_ranks))
-        elif target is SELF:
-            targets = [src]
-        else:
-            targets = [int(target)]
+        targets = self._targets(src, target)
+        msgs = [Message(EVENT, src, t,
+                        Event(data=payload if (ref or len(targets) == 1)
+                              else copy_payload(payload),
+                              source=src, eid=eid, persistent=persistent))
+                for t in targets]
         sch = self._sched[src]
-        for t in targets:
-            ev = Event(data=payload if (ref or len(targets) == 1)
-                       else copy_payload(payload),
-                       source=src, eid=eid, persistent=persistent)
-            with sch._mu:
-                sch.sent += 1
-            # a send to a dead destination is counted by the transport as
-            # dropped; termination balances sent == received + dropped
-            self.transport.send(Message(EVENT, src, t, ev))
+        # sent is counted before the send so the termination detector can
+        # never observe balanced counters with the message still in flight;
+        # a send to a dead destination is counted by the transport as
+        # dropped: termination balances sent == received + dropped
+        with sch._mu:
+            sch.sent += len(msgs)
+        if len(msgs) == 1:
+            self.transport.send(msgs[0])
+        else:
+            self.transport.send_many(msgs)
 
-    def _refire_local(self, rank: int, ev: Event) -> None:
-        """Persistent event consumed -> re-fired locally (paper §IV.A)."""
-        sch = self._sched[rank]
-        sch.sent += 1  # caller holds sch._mu
+    def _fire_batch(self, src: int, fires: Sequence[FireLike], *,
+                    persistent: bool, ref: bool) -> None:
+        msgs: List[Message] = []
+        for f in fires:
+            target, eid = f[0], f[1]
+            data = f[2] if len(f) > 2 else None
+            payload = data if ref else copy_payload(data)
+            targets = self._targets(src, target)
+            for t in targets:
+                msgs.append(Message(EVENT, src, t,
+                                    Event(data=payload
+                                          if (ref or len(targets) == 1)
+                                          else copy_payload(payload),
+                                          source=src, eid=eid,
+                                          persistent=persistent)))
+        if not msgs:
+            return
+        sch = self._sched[src]
+        with sch._mu:
+            sch.sent += len(msgs)
+        self.transport.send_many(msgs)
+
+    def _send_refire(self, rank: int, ev: Event) -> None:
+        """Persistent event consumed -> re-fired locally (paper §IV.A).
+        The scheduler already counted it as sent under its own lock."""
         self.transport.send(Message(EVENT, rank, rank, ev.clone()))
 
     # system events bypass Context validation
@@ -202,75 +294,106 @@ class Runtime:
 
     # ------------------------------------------------------------- progress
     def _progress_loop(self, rank: int) -> None:
+        recv_many = getattr(self.transport, "recv_many", None)
         while not self._shutdown and not self.transport.is_dead(rank):
-            msg = self.transport.recv(rank, timeout=0.1)
-            if msg is not None:
-                self._handle(rank, msg)
+            if recv_many is not None:
+                msgs = recv_many(rank, timeout=0.5)
+            else:
+                msg = self.transport.recv(rank, timeout=0.5)
+                msgs = [msg] if msg is not None else []
+            if msgs:
+                self._handle_many(rank, msgs)
 
     def _progress_poll(self, rank: int) -> bool:
         """One poll step for idle-worker progress mode.  True if progressed."""
-        msg = self.transport.try_recv(rank)
-        if msg is None:
+        msgs = self.transport.drain(rank, max_n=64)
+        if not msgs:
             return False
-        self._handle(rank, msg)
+        self._handle_many(rank, msgs)
         return True
 
-    def _handle(self, rank: int, msg: Message) -> None:
-        if msg.kind == EVENT:
-            self._sched[rank].deliver(msg.payload)
-        elif msg.kind == CONTROL:
-            tag, data = msg.payload
-            if tag == "status?":
-                st = self._sched[rank].status()
-                st["rank"] = rank
+    def _handle_many(self, rank: int, msgs: List[Message]) -> None:
+        events = [m.payload for m in msgs if m.kind == EVENT]
+        if events:
+            self._sched[rank].deliver_many(events)
+        for m in msgs:
+            if m.kind == CONTROL:
+                self._handle_control(rank, m)
+
+    def _handle_control(self, rank: int, msg: Message) -> None:
+        tag, data = msg.payload
+        if tag == "status?":
+            st = self._sched[rank].status()
+            st["rank"] = rank
+            with self._status_cv:
                 self._status_replies.append(st)
-                with self._status_cv:
-                    self._status_cv.notify_all()
+                self._status_cv.notify_all()
 
     # --------------------------------------------------------------- timers
     def _fire_after(self, src: int, delay: float, target: Any, eid: str,
                     data: Any) -> TimerHandle:
+        if target is ALL:
+            dst = self.n_ranks          # ALL sentinel in the timer tuple
+        elif target is SELF:
+            dst = src
+        else:
+            dst = int(target)
+            if not 0 <= dst < self.n_ranks:
+                raise ValueError(f"fire target rank {dst} out of range "
+                                 f"[0, {self.n_ranks})")
         tid = next(self._timer_ids)
         payload = copy_payload(data)
         with self._timer_cv:
             heapq.heappush(self._timers,
-                           (time.monotonic() + delay, tid, src,
-                            self.n_ranks if target is ALL else (
-                                src if target is SELF else int(target)),
+                           (time.monotonic() + delay, tid, src, dst,
                             eid, payload))
+            self._live_tids.add(tid)
             self._pending_timers += 1
             self._timer_cv.notify_all()
         return TimerHandle(self, tid)
 
     def _cancel_timer(self, tid: int) -> bool:
         with self._timer_cv:
+            if tid not in self._live_tids:
+                return False  # already fired (or already cancelled)
+            self._live_tids.discard(tid)
             self._cancelled.add(tid)
+            self._pending_timers -= 1
             self._timer_cv.notify_all()
+        self._poke()
         return True
 
     def _timer_loop(self) -> None:
         while not self._shutdown:
             with self._timer_cv:
+                if self._shutdown:  # re-check under the cv: shutdown is
+                    return          # flagged before its notify is sent
                 if not self._timers:
-                    self._timer_cv.wait(0.05)
+                    self._timer_cv.wait()  # woken on push/cancel/shutdown
                     continue
                 when, tid, src, dst, eid, data = self._timers[0]
-                now = time.monotonic()
                 if tid in self._cancelled:
+                    # cancellation already un-counted it; just drop the entry
                     heapq.heappop(self._timers)
                     self._cancelled.discard(tid)
-                    self._pending_timers -= 1
                     continue
+                now = time.monotonic()
                 if when > now:
-                    self._timer_cv.wait(min(when - now, 0.05))
+                    self._timer_cv.wait(when - now)
                     continue
                 heapq.heappop(self._timers)
-                self._pending_timers -= 1
+                self._live_tids.discard(tid)
             if dst == self.n_ranks:  # ALL
                 for t in range(self.n_ranks):
                     self._fire_sys(src, t, eid, data)
             else:
                 self._fire_sys(src, dst, eid, data)
+            with self._timer_cv:
+                # un-count the pending timer only after _fire_sys counted
+                # the send: the detector must never observe timers == 0 with
+                # the event not yet in the sent counter, or it could declare
+                # termination in the gap and drop the timer event
+                self._pending_timers -= 1
 
     # ---------------------------------------------------- failure injection
     def kill_rank(self, rank: int) -> None:
@@ -283,6 +406,7 @@ class Runtime:
         for r in range(self.n_ranks):
             if r != rank and not self.transport.is_dead(r):
                 self._fire_sys(r, r, RANK_FAILED, rank)
+        self._poke(force=True)  # alive-set changed under the detector
 
     def is_dead(self, rank: int) -> bool:
         return self.transport.is_dead(rank)
@@ -295,6 +419,7 @@ class Runtime:
                     f"task {inst.name or inst.fn.__name__!r} on rank {rank} "
                     f"raised {type(exc).__name__}: {exc}")
                 self._error.__cause__ = exc
+        self._poke(force=True)  # the detector returns as soon as it sees it
 
     def _ctx(self, rank: int) -> Context:
         return self._ctxs[rank]
@@ -343,6 +468,8 @@ class Runtime:
                 s.stop()
             for r in range(self.n_ranks):
                 self.transport.wake(r)
+            with self._timer_cv:
+                self._timer_cv.notify_all()
             for t in self._main_threads:
                 t.join(5.0)
             for s in self._sched:
@@ -354,32 +481,71 @@ class Runtime:
     # ------------------------------------------------- termination detector
     def _poll_status(self) -> List[dict]:
         alive = [r for r in range(self.n_ranks) if not self.is_dead(r)]
-        self._status_replies = []
         if self._progress_mode == "thread":
+            with self._status_cv:
+                self._status_replies = []
             for r in alive:
                 self.transport.send(Message(CONTROL, -1, r, ("status?", None)))
             deadline = time.monotonic() + 1.0
             with self._status_cv:
-                while (len(self._status_replies) < len(alive)
-                       and time.monotonic() < deadline):
-                    self._status_cv.wait(0.05)
-            return list(self._status_replies)
+                while len(self._status_replies) < len(alive):
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        break
+                    self._status_cv.wait(remaining)
+                return list(self._status_replies)
         # worker-poll mode: workers may all be busy; read directly (in-proc
         # shortcut is safe here because status() takes the scheduler lock)
         return [dict(self._sched[r].status(), rank=r) for r in alive]
 
+    def _maybe_quiescent(self) -> bool:
+        """Lock-free pre-check gating the formal status poll.  Dirty reads
+        are safe here: a false positive only costs one formal poll, a false
+        negative is recovered by the next poke or the backstop wait.  This
+        keeps the detector off the progress threads' critical path while
+        the system is busy (e.g. it never sends CONTROL traffic in the
+        middle of a ping-pong exchange)."""
+        s = rcv = 0
+        for r in range(self.n_ranks):
+            sch = self._sched[r]
+            if not self.is_dead(r):
+                if (sch._ready or sch._running or sch._resuming
+                        or not sch._main_done):
+                    return False
+            s += sch.sent
+            rcv += sch.received
+        if self._pending_timers:
+            return False
+        # no mailbox probe here: an undelivered user event already shows as
+        # s > rcv (sent counts at fire, received at delivery), and the formal
+        # poll re-checks mailboxes authoritatively — probing them here would
+        # contend with the transport's hot path on every idle transition
+        return s == rcv + self.transport.dropped
+
     def _await_termination(self, timeout: float) -> None:
         """Mattern four-counter quiescence: two consecutive stable polls with
-        every rank idle and globally sent == received."""
+        every rank idle and globally sent == received.  Between polls the
+        detector blocks on the activity epoch (woken by idle transitions)
+        instead of sleep-polling."""
         t0 = time.monotonic()
         prev: Optional[Tuple[int, int]] = None
         while True:
             if self._error is not None:
                 return
-            if time.monotonic() - t0 > timeout:
+            remaining = timeout - (time.monotonic() - t0)
+            if remaining <= 0:
                 raise TimeoutError(
                     f"EDAT did not terminate within {timeout}s; "
                     f"status={self._poll_status()}")
+            with self._quiet_cv:
+                epoch = self._epoch
+            if not self._maybe_quiescent():
+                prev = None
+                with self._quiet_cv:
+                    if self._epoch == epoch and self._error is None:
+                        self._quiet_cv.wait(min(self._poll_interval,
+                                                remaining))
+                continue
             sts = self._poll_status()
             alive = [r for r in range(self.n_ranks) if not self.is_dead(r)]
             if len(sts) < len(alive):
@@ -400,7 +566,10 @@ class Runtime:
             all_idle = all(x["idle"] for x in sts) and mailbox == 0 and timers == 0
             if not all_idle or s != rcv:
                 prev = None
-                time.sleep(self._poll_interval)
+                with self._quiet_cv:
+                    if self._epoch == epoch and self._error is None:
+                        self._quiet_cv.wait(min(self._poll_interval,
+                                                remaining))
                 continue
             if prev == (s, rcv):
                 # two consecutive stable, idle, balanced polls -> quiescent
@@ -425,5 +594,6 @@ class Runtime:
                     import warnings
                     warnings.warn(msg, stacklevel=1)
                 return
+            # first stable poll: confirm immediately — the counters must
+            # hold identical across two polls for quiescence
             prev = (s, rcv)
-            time.sleep(self._poll_interval)

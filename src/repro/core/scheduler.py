@@ -15,6 +15,12 @@ Implements the paper's semantics precisely:
   spawned so the configured concurrency is preserved) and releases/reacquires
   named locks (paper §IV.B/C);
 * named locks auto-release at task end (paper §IV.C).
+
+Delivery is routed through an :class:`~repro.core.router.EventRouter`
+index — O(matching consumers) per event instead of O(all consumers) — and
+every blocked path (``wait``, named locks, idle workers, slot re-acquisition)
+blocks on a condition variable that is notified on the exact state change,
+rather than sleep-polling.
 """
 from __future__ import annotations
 
@@ -24,6 +30,7 @@ from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from .event import ALL, ANY, SELF, Dep, Event
+from .router import EventRouter
 
 _inst_uid = itertools.count()
 
@@ -146,13 +153,14 @@ class TaskConsumer(Consumer):
 class Waiter(Consumer):
     """A parked task inside ``wait`` (paper §IV.B)."""
 
-    __slots__ = ("frame", "cv", "woken")
+    __slots__ = ("frame", "cv", "woken", "parked")
 
     def __init__(self, deps, cv: threading.Condition):
         super().__init__(deps, None)
         self.frame = Frame(deps)
         self.cv = cv
         self.woken = False
+        self.parked = False
 
     def try_fill(self, ev: Event) -> bool:
         return self.frame.try_fill(ev)
@@ -201,15 +209,20 @@ class Scheduler:
         self._mu = threading.Lock()
         self._cv = threading.Condition(self._mu)
 
-        self._consumers: List[Consumer] = []   # registration order = precedence
+        self._consumers: List[Consumer] = []   # registration order (enumeration)
+        self._router = EventRouter()           # (source, eid) -> consumers
         self._reg_counter = itertools.count()
         self._store: Dict[Tuple[int, str], deque] = {}
+        self._store_eids: Dict[str, set] = {}  # eid -> non-empty store keys
         self._arrival = itertools.count()      # store-arrival order (for ANY)
         self._ready: deque = deque()
 
         self._running = 0
         self._parked = 0
+        self._resuming = 0                     # woken waiters not yet resumed
         self._loops = 0                        # worker threads in their loop
+        self._mail = False                     # transport notify (worker mode)
+        self._mail_hooked = False              # transport has a real notify
         self._shutdown = False
         self._main_done = False
 
@@ -217,7 +230,7 @@ class Scheduler:
         self.sent = 0
         self.received = 0
 
-        # named locks: name -> (owner thread id | None, waiters condition)
+        # named locks: name -> (owner thread id | None)
         self._locks: Dict[str, Any] = {}
         self._lock_cv = threading.Condition(self._mu)
 
@@ -250,38 +263,69 @@ class Scheduler:
         for t in self._threads:
             t.join(timeout)
 
+    def _idle_locked(self) -> bool:
+        return (not self._ready and self._running == 0
+                and self._resuming == 0 and self._main_done)
+
+    def _notify_mail(self):
+        """Transport notify hook (worker-poll mode): a message arrived.
+
+        The flag-up fast path is safe without the lock: if we observe
+        ``_mail`` already set, the worker that will clear it polls *after*
+        clearing, and our message was enqueued *before* this check — so that
+        poll cannot miss it.  This keeps senders off the receiving
+        scheduler's mutex during bursts."""
+        if self._mail:
+            return
+        with self._mu:
+            self._mail = True
+            self._cv.notify_all()
+
     # -------------------------------------------------------------- delivery
     def deliver(self, ev: Event) -> None:
-        """Process an arriving event: offer to consumers (in precedence
-        order), else store.  Caller: progress thread / polling worker."""
+        self.deliver_many((ev,))
+
+    def deliver_many(self, evs) -> None:
+        """Process arriving events under one lock round-trip: offer each to
+        the router (precedence order), else store.  Caller: progress thread
+        / polling worker."""
         ready: List[Instance] = []
         wake: List[Waiter] = []
+        refires: List[Event] = []
         with self._mu:
-            self.received += 1
-            self._offer_locked(ev, ready, wake)
-            for inst in ready:
-                self._ready.append(inst)
+            self.received += len(evs)
+            for ev in evs:
+                self._offer_locked(ev, ready, wake, refires)
             if ready:
+                self._ready.extend(ready)
                 self._cv.notify_all()
+            # count refires as sent while still holding the lock so the
+            # termination detector never sees balanced counters with a
+            # re-fire still pending (Mattern consistency)
+            self.sent += len(refires)
+            idle = self._idle_locked()
         for w in wake:
             with w.cv:
                 w.cv.notify_all()
+        for ev in refires:
+            self.runtime._send_refire(self.rank, ev)
+        if idle and not refires:
+            self.runtime._poke()
 
     def _offer_locked(self, ev: Event, ready: List[Instance],
-                      wake: List[Waiter]) -> None:
-        for c in self._consumers:
-            if c.try_fill(ev):
-                self._consumed_locked(ev)
-                self._drain_consumer_locked(c, ready, wake)
-                return
-        key = (ev.source, ev.eid)
-        ev.seq_store = next(self._arrival)  # type: ignore[attr-defined]
-        self._store.setdefault(key, deque()).append(ev)
-
-    def _consumed_locked(self, ev: Event) -> None:
-        """Persistent events re-fire locally on consumption (paper §IV.A)."""
-        if ev.persistent:
-            self.runtime._refire_local(self.rank, ev)
+                      wake: List[Waiter], refires: List[Event]) -> None:
+        c = self._router.offer(ev)
+        if c is not None:
+            if ev.persistent:
+                refires.append(ev)  # re-fires locally on consumption (§IV.A)
+            self._drain_consumer_locked(c, ready, wake)
+            if isinstance(c, TaskConsumer) and c.persistent:
+                # a dispatched frame opened fresh slots (paper §IV.A refill):
+                # top them up from stored events, which would otherwise sit
+                # unconsumed until another matching event happened to arrive
+                self._fill_from_store_locked(c, ready, wake, refires)
+            return
+        self._store_put_locked(ev)
 
     def _drain_consumer_locked(self, c: Consumer, ready: List[Instance],
                                wake: List[Waiter]) -> None:
@@ -292,36 +336,63 @@ class Scheduler:
             if isinstance(c, TaskConsumer):
                 ready.append(Instance(c.fn, evs, c.name))
             else:
+                if c.parked:
+                    # keep the rank non-idle until the woken thread resumes
+                    self._resuming += 1
                 wake.append(c)  # Waiter: events already in its frame
         if c.done:
-            try:
-                self._consumers.remove(c)
-            except ValueError:
-                pass
+            self._remove_consumer_locked(c)
 
-    def _take_from_store_locked(self, dep: Dep) -> Optional[Event]:
-        """Oldest stored event matching ``dep`` (ANY scans all sources)."""
-        best_key, best_seq = None, None
-        if dep.source is ANY:
-            for (src, eid), dq in self._store.items():
-                if eid == dep.eid and dq:
-                    seq = dq[0].seq_store  # type: ignore[attr-defined]
-                    if best_seq is None or seq < best_seq:
-                        best_key, best_seq = (src, eid), seq
-        else:
-            key = (dep.source, dep.eid)
-            if self._store.get(key):
-                best_key = key
-        if best_key is None:
-            return None
-        dq = self._store[best_key]
+    def _remove_consumer_locked(self, c: Consumer) -> None:
+        try:
+            self._consumers.remove(c)
+        except ValueError:
+            pass  # satisfied from store before registration
+        self._router.unregister(c)
+
+    # ----------------------------------------------------------------- store
+    def _store_put_locked(self, ev: Event) -> None:
+        key = (ev.source, ev.eid)
+        ev.seq_store = next(self._arrival)  # type: ignore[attr-defined]
+        dq = self._store.get(key)
+        if dq is None:
+            dq = self._store[key] = deque()
+            self._store_eids.setdefault(ev.eid, set()).add(key)
+        dq.append(ev)
+
+    def _store_pop_locked(self, key: Tuple[int, str]) -> Event:
+        dq = self._store[key]
         ev = dq.popleft()
         if not dq:
-            del self._store[best_key]
+            del self._store[key]
+            keys = self._store_eids.get(key[1])
+            if keys is not None:
+                keys.discard(key)
+                if not keys:
+                    del self._store_eids[key[1]]
         return ev
 
+    def _take_from_store_locked(self, dep: Dep) -> Optional[Event]:
+        """Oldest stored event matching ``dep`` (ANY scans only the store
+        keys carrying its eid, via the eid side-index)."""
+        best_key, best_seq = None, None
+        if dep.source is ANY:
+            for key in self._store_eids.get(dep.eid, ()):
+                dq = self._store.get(key)
+                if dq:
+                    seq = dq[0].seq_store  # type: ignore[attr-defined]
+                    if best_seq is None or seq < best_seq:
+                        best_key, best_seq = key, seq
+        else:
+            if self._store.get(dep.key):
+                best_key = dep.key
+        if best_key is None:
+            return None
+        return self._store_pop_locked(best_key)
+
     def _fill_from_store_locked(self, c: Consumer, ready: List[Instance],
-                                wake: List[Waiter]) -> None:
+                                wake: List[Waiter],
+                                refires: List[Event]) -> None:
         """Greedily satisfy a new consumer from stored events (keeps firing
         new frames for persistent tasks until the store runs dry)."""
         progress = True
@@ -339,7 +410,8 @@ class Scheduler:
                     ev = self._take_from_store_locked(s.dep)
                     if ev is not None:
                         s.event = ev
-                        self._consumed_locked(ev)
+                        if ev.persistent:
+                            refires.append(ev)
                         progress = True
             self._drain_consumer_locked(c, ready, wake)
             if c.done or not isinstance(c, TaskConsumer) or not c.persistent:
@@ -352,73 +424,96 @@ class Scheduler:
         c = TaskConsumer(fn, deps, name, persistent)
         ready: List[Instance] = []
         wake: List[Waiter] = []
+        refires: List[Event] = []
         with self._mu:
             c.reg_order = next(self._reg_counter)
             if not deps and not persistent:
                 # zero-dependency transitory task: immediately eligible
                 ready.append(Instance(fn, [], name))
             else:
-                self._fill_from_store_locked(c, ready, wake)
+                self._fill_from_store_locked(c, ready, wake, refires)
                 if not c.done:
                     self._consumers.append(c)
+                    self._router.register(c)
             for inst in ready:
                 self._ready.append(inst)
             if ready:
                 self._cv.notify_all()
+            self.sent += len(refires)
         for w in wake:
             with w.cv:
                 w.cv.notify_all()
+        for ev in refires:
+            self.runtime._send_refire(self.rank, ev)
 
     def remove_task(self, name: str) -> bool:
         """Remove a named (typically persistent) task (paper §IV.A)."""
         with self._mu:
             for c in self._consumers:
                 if c.name == name:
-                    self._consumers.remove(c)
+                    self._remove_consumer_locked(c)
                     return True
         return False
 
     # ------------------------------------------------------- wait / retrieve
     def wait(self, deps: List[Dep]) -> List[Event]:
-        """Paper §IV.B ``edatWait``: pause task until deps satisfied."""
+        """Paper §IV.B ``edatWait``: pause task until deps satisfied.
+
+        Blocks on a per-waiter condition variable that ``deliver`` notifies
+        when the frame completes — no poll quantum on the wake path.
+        """
         deps = expand_deps(deps, self.rank, self.n_ranks)
         cv = threading.Condition()
         w = Waiter(deps, cv)
         ready: List[Instance] = []
         wake: List[Waiter] = []
+        refires: List[Event] = []
+        evs: Optional[List[Event]] = None
+        in_task = False
         with self._mu:
-            self._fill_from_store_locked(w, ready, wake)
+            self._fill_from_store_locked(w, ready, wake, refires)
             assert not ready
+            self.sent += len(refires)
             if w.frame.complete:
                 w.woken = True
-                return w.frame.events()
-            w.reg_order = next(self._reg_counter)
-            self._consumers.append(w)
-            in_task = self._tls.in_task
-            if in_task:
-                # park: free the running slot; spawn a replacement worker so
-                # the configured concurrency is preserved (paper §IV.B).
-                # The parking thread leaves the pool permanently (it exits
-                # after its task completes) — only on the first park.
-                self._running -= 1
-                if not self._tls.exit_after_task:
-                    self._tls.exit_after_task = True
-                    self._loops -= 1
-                    self._spawn_worker()
-            self._parked += 1
-            self._cv.notify_all()
+                evs = w.frame.events()
+            else:
+                w.reg_order = next(self._reg_counter)
+                self._consumers.append(w)
+                self._router.register(w)
+                in_task = self._tls.in_task
+                if in_task:
+                    # park: free the running slot; spawn a replacement worker
+                    # so the configured concurrency is preserved (paper
+                    # §IV.B).  The parking thread leaves the pool permanently
+                    # (it exits after its task completes) — only on the first
+                    # park.
+                    self._running -= 1
+                    if not self._tls.exit_after_task:
+                        self._tls.exit_after_task = True
+                        self._loops -= 1
+                        self._spawn_worker()
+                w.parked = True
+                self._parked += 1
+                self._cv.notify_all()
+        for ev in refires:
+            self.runtime._send_refire(self.rank, ev)
+        if evs is not None:
+            return evs
         held = self._release_all_locks()
         with cv:
             while not w.frame.complete and not self._shutdown:
-                cv.wait(0.05)
+                cv.wait()
         with self._mu:
             if in_task:
                 # re-acquire a running slot before resuming (paper: "a worker
-                # will continue to run the task")
+                # will continue to run the task"); woken by task completions
                 while self._running >= self.target and not self._shutdown:
-                    self._cv.wait(0.05)
+                    self._cv.wait()
                 self._running += 1
             self._parked -= 1
+            if w.woken:
+                self._resuming -= 1
         self._reacquire_locks(held)
         if self._shutdown and not w.frame.complete:
             raise RuntimeError("EDAT shut down while task was waiting")
@@ -428,25 +523,33 @@ class Scheduler:
         """Paper §IV.B ``edatRetrieveAny``: non-blocking subset retrieval."""
         deps = expand_deps(deps, self.rank, self.n_ranks)
         got: List[Event] = []
+        refires: List[Event] = []
         with self._mu:
             for d in deps:
                 ev = self._take_from_store_locked(d)
                 if ev is not None:
-                    self._consumed_locked(ev)
+                    if ev.persistent:
+                        refires.append(ev)
                     got.append(ev)
+            self.sent += len(refires)
+        for ev in refires:
+            self.runtime._send_refire(self.rank, ev)
         return got
 
     # ----------------------------------------------------------------- locks
     def lock(self, name: str, blocking: bool = True) -> bool:
         me = threading.get_ident()
         with self._mu:
-            owner = self._locks.get(name)
-            if owner == me:
+            if self._locks.get(name) == me:
+                # reentrant acquisition: still record it so the lock is
+                # auto-released at task end (paper §IV.C)
+                if self._tls.locks is not None:
+                    self._tls.locks.add(name)
                 return True
             while self._locks.get(name) is not None:
                 if not blocking:
                     return False
-                self._lock_cv.wait(0.05)
+                self._lock_cv.wait()  # notified by unlock / shutdown
                 if self._shutdown:
                     return False
             self._locks[name] = me
@@ -494,8 +597,17 @@ class Scheduler:
                 if poll and self._poll_once():
                     continue
                 with self._mu:
-                    if not self._ready and not self._shutdown:
-                        self._cv.wait(0.002 if poll else 0.1)
+                    if self._mail:
+                        self._mail = False  # message raced our last poll
+                    elif not self._ready and not self._shutdown:
+                        # woken by: ready work, task completion, shutdown,
+                        # or the transport notify hook (worker-poll mode).
+                        # A poll-mode transport without a notify hook can't
+                        # wake us on arrival: keep the seed's timed poll.
+                        if poll and not self._mail_hooked:
+                            self._cv.wait(0.002)
+                        else:
+                            self._cv.wait()
                 continue
             self._run(inst)
             if self._tls.exit_after_task:
@@ -525,11 +637,17 @@ class Scheduler:
                 self._running -= 1
                 self._executed += 1
                 self._cv.notify_all()
+                idle = self._idle_locked()
+            if idle:
+                self.runtime._poke()
 
     # ---------------------------------------------------------- termination
     def set_main_done(self):
         with self._mu:
             self._main_done = True
+            idle = self._idle_locked()
+        if idle:
+            self.runtime._poke()
 
     def status(self) -> dict:
         with self._mu:
@@ -540,8 +658,7 @@ class Scheduler:
                 for dq in self._store.values())
             return dict(
                 sent=self.sent, received=self.received,
-                idle=(not self._ready and self._running == 0
-                      and self._main_done),
+                idle=self._idle_locked(),
                 parked=self._parked, unmet=unmet,
                 stored=stored_transitory, executed=self._executed,
             )

@@ -10,6 +10,16 @@ preserves the *semantics* that matter for correctness arguments:
 * message counting hooks for distributed termination (Mattern four-counter),
 * sends to failed ranks are dropped (node-failure simulation).
 
+Batching: :meth:`Transport.send_many` enqueues a whole fire-batch with one
+lock round-trip per destination, and :meth:`InProcTransport.drain` pops every
+pending message in one round-trip — the runtime's progress path uses both so
+a burst of N events costs O(destinations) lock acquisitions, not O(N).
+
+Notification: :meth:`Transport.set_notify` registers a per-rank callback
+invoked after messages are enqueued (outside the mailbox lock).  In
+idle-worker progress mode the runtime points it at the scheduler's condition
+variable so an idle worker wakes on arrival instead of sleep-polling.
+
 A real multi-host deployment would implement :class:`Transport` over
 ``jax.distributed`` / gRPC; nothing above this layer would change.
 """
@@ -19,7 +29,7 @@ import abc
 import dataclasses
 import threading
 from collections import deque
-from typing import Any, Optional
+from typing import Any, Callable, List, Optional
 
 # message kinds
 EVENT = "event"            # user event (counted for termination)
@@ -49,6 +59,29 @@ class Transport(abc.ABC):
     def wake(self, rank: int) -> None:
         """Wake a blocked :meth:`recv` (used at shutdown)."""
 
+    def send_many(self, msgs: List[Message]) -> int:
+        """Enqueue a batch; returns the number actually delivered.  The
+        default loops over :meth:`send`; implementations should batch."""
+        return sum(1 for m in msgs if self.send(m))
+
+    def drain(self, rank: int, max_n: Optional[int] = None) -> List[Message]:
+        """Pop up to ``max_n`` pending messages (all, if None) without
+        blocking.  The default loops over zero-timeout :meth:`recv`;
+        implementations should batch."""
+        out: List[Message] = []
+        while max_n is None or len(out) < max_n:
+            m = self.recv(rank, timeout=0)
+            if m is None:
+                break
+            out.append(m)
+        return out
+
+    def set_notify(self, rank: int, fn: Optional[Callable[[], None]]) -> None:
+        """Register a callback invoked after message arrival for ``rank``
+        (no-op by default; callback must not assume any lock is held).
+        Transports that do not override this cannot wake idle workers, so
+        the runtime falls back to timed polling in worker-progress mode."""
+
 
 class InProcTransport(Transport):
     """Threads-as-ranks transport with per-destination FIFO mailboxes.
@@ -62,6 +95,7 @@ class InProcTransport(Transport):
         self._boxes = [deque() for _ in range(n_ranks)]
         self._cvs = [threading.Condition() for _ in range(n_ranks)]
         self._dead = [False] * n_ranks
+        self._notify: List[Optional[Callable[[], None]]] = [None] * n_ranks
         self._dropped = 0  # messages dropped due to dead destinations
         self._mu = threading.Lock()
 
@@ -85,6 +119,9 @@ class InProcTransport(Transport):
         return self._dropped
 
     # -- Transport API -------------------------------------------------------
+    def set_notify(self, rank: int, fn: Optional[Callable[[], None]]) -> None:
+        self._notify[rank] = fn
+
     def send(self, msg: Message) -> bool:
         if self._dead[msg.dst]:
             with self._mu:
@@ -93,11 +130,39 @@ class InProcTransport(Transport):
         cv = self._cvs[msg.dst]
         with cv:
             if self._dead[msg.dst]:  # re-check under the box lock
-                self._dropped += 1
+                with self._mu:
+                    self._dropped += 1
                 return False
             self._boxes[msg.dst].append(msg)
             cv.notify()
+        hook = self._notify[msg.dst]
+        if hook is not None:
+            hook()  # outside the mailbox lock: hook may take scheduler locks
         return True
+
+    def send_many(self, msgs: List[Message]) -> int:
+        delivered = 0
+        by_dst: dict = {}
+        for m in msgs:
+            by_dst.setdefault(m.dst, []).append(m)
+        for dst, ms in by_dst.items():
+            if self._dead[dst]:
+                with self._mu:
+                    self._dropped += len(ms)
+                continue
+            cv = self._cvs[dst]
+            with cv:
+                if self._dead[dst]:
+                    with self._mu:
+                        self._dropped += len(ms)
+                    continue
+                self._boxes[dst].extend(ms)
+                cv.notify()
+            delivered += len(ms)
+            hook = self._notify[dst]
+            if hook is not None:
+                hook()
+        return delivered
 
     def recv(self, rank: int, timeout: Optional[float]) -> Optional[Message]:
         cv = self._cvs[rank]
@@ -109,12 +174,42 @@ class InProcTransport(Transport):
             return None
 
     def try_recv(self, rank: int) -> Optional[Message]:
-        """Non-blocking receive (used by idle-worker polling mode)."""
+        """Non-blocking single-message receive (utility; batch consumers
+        use :meth:`drain`)."""
         cv = self._cvs[rank]
         with cv:
             if self._boxes[rank]:
                 return self._boxes[rank].popleft()
             return None
+
+    def recv_many(self, rank: int,
+                  timeout: Optional[float]) -> List[Message]:
+        """Blocking batched receive: wait up to ``timeout`` for the mailbox
+        to be non-empty, then pop everything in one lock round-trip."""
+        cv = self._cvs[rank]
+        with cv:
+            if not self._boxes[rank]:
+                cv.wait(timeout)
+            box = self._boxes[rank]
+            if not box:
+                return []
+            out = list(box)
+            box.clear()
+            return out
+
+    def drain(self, rank: int, max_n: Optional[int] = None) -> List[Message]:
+        """Pop up to ``max_n`` pending messages (all, if None) in FIFO order
+        with a single lock round-trip.  Never blocks."""
+        with self._cvs[rank]:
+            box = self._boxes[rank]
+            if not box:
+                return []
+            if max_n is None or max_n >= len(box):
+                out = list(box)
+                box.clear()
+            else:
+                out = [box.popleft() for _ in range(max_n)]
+            return out
 
     def wake(self, rank: int) -> None:
         with self._cvs[rank]:

@@ -1,0 +1,15 @@
+"""Version compatibility helpers for Pallas TPU APIs.
+
+The Mosaic compiler-params class was renamed across JAX releases
+(``TPUCompilerParams`` -> ``CompilerParams``); resolve whichever this
+JAX provides so the kernels run on both sides of the rename.
+"""
+from __future__ import annotations
+
+
+def tpu_compiler_params(pltpu, **kwargs):
+    """Build the TPU compiler-params object for this JAX version."""
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

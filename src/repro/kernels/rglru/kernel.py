@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._compat import tpu_compiler_params
+
 _C = 8.0
 
 
@@ -81,7 +83,8 @@ def rglru_fwd(x, r, i, lam, *, block_t: int = 128, block_w: int = 256,
                                lambda b, iw, it: (b, it, iw)),
         out_shape=jax.ShapeDtypeStruct((B, T, W), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_w,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
+            pltpu,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, r, i, lam)

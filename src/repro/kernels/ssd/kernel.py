@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._compat import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -88,7 +90,8 @@ def ssd_fwd(x, dt, a_log, b, c, *, chunk: int = 128,
                                lambda ib, ih, ic: (ib, ic, ih, 0)),
         out_shape=jax.ShapeDtypeStruct((B, T, H, Pd), x.dtype),
         scratch_shapes=[pltpu.VMEM((N, Pd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
+            pltpu,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, a_log, b, c)

@@ -79,12 +79,15 @@ def _dq8_tree(tree):
 class _RankState:
     def __init__(self, rank):
         self.rank = rank
+        self.mu = threading.Lock()  # serialises commit vs recovery rollback
         self.params = None
         self.opt_state = None
         self.step = 0
         self.epoch = 0            # bumped on every recovery
         self.alive: List[int] = []
         self.done = False
+        self.stepping = False     # exactly one live step chain per rank
+        self.chain_dropped = None # epoch of a "go" token eaten by the flag
         self.hb_mute = False      # test hook: simulated hang
         self.stale_used = 0
         self.timeouts = 0
@@ -201,10 +204,39 @@ class EventDrivenTrainer:
 
     # ---------------------------------------------------------------- tasks
     def _step_task(self, ctx: edat.Context, events):
-        cfg = self.cfg
         st = self.states[ctx.rank]
         if st.done or self.runtime.is_dead(ctx.rank):
             return
+        token = events[0].data     # chain token: the epoch it was fired for
+        with st.mu:
+            if token is not None and token != st.epoch:
+                return             # stale chain token from before a recovery
+            if st.stepping:
+                # a duplicate "go" (e.g. two recoveries racing): exactly one
+                # step chain may run per rank, or concurrent instances would
+                # steal each other's grad events and diverge the replicas.
+                # Remember the eaten token so the running instance can revive
+                # the chain when it exits.
+                st.chain_dropped = st.epoch
+                return
+            st.stepping = True
+        again = False
+        try:
+            again = self._step_body(ctx, st)
+        finally:
+            with st.mu:
+                st.stepping = False
+                revive = (st.chain_dropped is not None
+                          and st.chain_dropped == st.epoch and not st.done)
+                st.chain_dropped = None
+                epoch_now = st.epoch
+        if again or revive:
+            ctx.fire(edat.SELF, "go", epoch_now)
+
+    def _step_body(self, ctx: edat.Context, st: "_RankState") -> bool:
+        """One training step.  Returns True iff the chain should continue
+        (the caller fires the next "go" after releasing the chain flag)."""
+        cfg = self.cfg
         if cfg.stall and ctx.rank in cfg.stall:
             at, secs = cfg.stall[ctx.rank]
             if st.step == at:
@@ -215,7 +247,7 @@ class EventDrivenTrainer:
         alive = sorted(st.alive)
         if ctx.rank not in alive:    # fenced while stalled
             st.done = True
-            return
+            return False
         shard = alive.index(ctx.rank)
         batch = self.data.batch(st.step, shard, len(alive))
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
@@ -232,7 +264,9 @@ class EventDrivenTrainer:
         deadline = time.monotonic() + cfg.collect_timeout
         while len(got) < need:
             if st.epoch != epoch or st.done:
-                return  # recovery happened under us: abandon this step
+                # recovery happened under us: abandon this step; the
+                # recovery's own chain token (re)starts the stepping
+                return False
             evs = ctx.retrieve_any([(edat.ANY, "grad")])
             for ev in evs:
                 p = ev.data
@@ -262,25 +296,34 @@ class EventDrivenTrainer:
             st.stale_used += 1
         gavg = jax.tree.map(lambda x: jnp.asarray(x / weight), gsum)
 
-        st.params, st.opt_state, om = self._apply_fn(
-            st.params, st.opt_state, gavg, jnp.asarray(st.step))
-        st.step += 1
+        snap = None
+        with st.mu:
+            if st.epoch != epoch or st.done:
+                # a rollback landed after collection: committing now would
+                # silently clobber the restored checkpoint state
+                return False
+            st.params, st.opt_state, om = self._apply_fn(
+                st.params, st.opt_state, gavg, jnp.asarray(st.step))
+            st.step += 1
+            step_now = st.step
+            if (cfg.ckpt_dir and ctx.rank == min(alive)
+                    and step_now % cfg.ckpt_every == 0):
+                snap = {"params": jax.tree.map(np.asarray, st.params),
+                        "opt": jax.tree.map(np.asarray, st.opt_state)}
+            if step_now >= cfg.steps:
+                st.done = True
 
-        ctx.fire(0, "metric", {"rank": ctx.rank, "step": st.step,
+        ctx.fire(0, "metric", {"rank": ctx.rank, "step": step_now,
                                "loss": float(loss),
                                "n_grads": len(got), "n_stale": len(stale)})
-        if (cfg.ckpt_dir and ctx.rank == min(alive)
-                and st.step % cfg.ckpt_every == 0):
-            snap = {"params": jax.tree.map(np.asarray, st.params),
-                    "opt": jax.tree.map(np.asarray, st.opt_state)}
-            ctx.fire(0, "ckpt", {"step": st.step, "snap": snap}, ref=True)
+        if snap is not None:
+            ctx.fire(0, "ckpt", {"step": step_now, "snap": snap}, ref=True)
 
-        if st.step < cfg.steps:
-            ctx.fire(edat.SELF, "go")
-        else:
-            st.done = True
-            if cfg.hb_interval > 0:
-                ctx.fire(0, "__hbdone", ctx.rank)
+        if step_now < cfg.steps:
+            return True
+        if cfg.hb_interval > 0:
+            ctx.fire(0, "__hbdone", ctx.rank)
+        return False
 
     def _ckpt_task(self, ctx: edat.Context, events):
         p = events[0].data
@@ -357,8 +400,10 @@ class EventDrivenTrainer:
                                                step=info["step"])
         except FileNotFoundError:
             return
-        st.params = jax.tree.map(jnp.asarray, tree["params"])
-        st.opt_state = jax.tree.map(jnp.asarray, tree["opt"])
-        st.step = step
-        st.epoch += 1            # invalidates in-flight grads
-        ctx.fire(edat.SELF, "go")
+        with st.mu:
+            st.params = jax.tree.map(jnp.asarray, tree["params"])
+            st.opt_state = jax.tree.map(jnp.asarray, tree["opt"])
+            st.step = step
+            st.epoch += 1        # invalidates in-flight grads
+            epoch_now = st.epoch
+        ctx.fire(edat.SELF, "go", epoch_now)

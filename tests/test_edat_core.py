@@ -377,10 +377,15 @@ def test_test_lock_nonblocking():
         res["t1_reacquired"] = ctx.test_lock("L")
 
     def t2(ctx, events):
-        res["while_held"] = False  # t1 parked in wait -> lock was released
-        if ctx.test_lock("L"):
-            res["while_held"] = True
-            ctx.unlock("L")
+        # t1 parked in wait -> lock was released.  "locked" is fired before
+        # t1 enters wait(), so poll briefly: t1 may not have parked yet.
+        res["while_held"] = False
+        for _ in range(400):
+            if ctx.test_lock("L"):
+                res["while_held"] = True
+                ctx.unlock("L")
+                break
+            time.sleep(0.005)
         ctx.fire(edat.SELF, "done")
 
     def main(ctx):
@@ -426,8 +431,11 @@ def test_listing10_mutex_via_events():
                 time.sleep(0.01)
             assert ctx.remove_task("upd")
 
-    # run with enough workers that unsafe interleaving WOULD occur
-    run(2, main2, workers=4, timeout=60)
+    # run with enough workers that unsafe interleaving WOULD occur.
+    # unconsumed="ignore": remove_task races the final instance's re-fire of
+    # the "data" token, which may then be stored with no consumer left —
+    # an expected leftover of §IV.A named-task removal, not a test failure
+    run(2, main2, workers=4, timeout=60, unconsumed="ignore")
     assert state["v"] == N
     assert state["max_conc"] == 1
 
@@ -517,6 +525,106 @@ def test_duplicate_dependency_two_slots():
 
     run(1, main)
     assert got == [[1, 2]]
+
+
+def test_fire_batch_fifo_and_targets():
+    """fire_batch: per-(src,dst) FIFO across the batch; SELF/ALL targets and
+    payload-copy semantics identical to single fire."""
+    import numpy as np
+    got = []
+    bcast = []
+
+    def sink(ctx, events):
+        got.append(events[0].data if not isinstance(events[0].data,
+                                                    np.ndarray)
+                   else list(events[0].data))
+
+    def btask(ctx, events):
+        bcast.append(ctx.rank)
+
+    def main(ctx):
+        ctx.submit(btask, deps=[(0, "b")])
+        if ctx.rank == 1:
+            for i in range(50):
+                ctx.submit(sink, deps=[(0, "seq")])
+        elif ctx.rank == 0:
+            buf = np.array([7])
+            ctx.fire_batch(
+                [(1, "seq", i) for i in range(49)]
+                + [(1, "seq", buf), (edat.ALL, "b")])
+            buf[:] = 0  # mutation after fire_batch must not be observed
+
+    run(2, main)
+    assert got == list(range(49)) + [[7]]
+    assert sorted(bcast) == [0, 1]
+
+
+def test_timer_cancel_before_firing():
+    """cancel() before the deadline: True, and the event never fires."""
+    res = {}
+
+    def t(ctx, events):  # pragma: no cover - must not run
+        res["fired"] = True
+
+    def main(ctx):
+        if ctx.rank == 0:
+            h = ctx.fire_after(5.0, edat.SELF, "never")
+            ctx.submit(t, deps=[(edat.SELF, "never")])
+            res["cancelled"] = h.cancel()
+            res["again"] = h.cancel()      # second cancel: already cancelled
+
+    rt = edat.Runtime(1, workers_per_rank=2)
+    t0 = time.monotonic()
+    with pytest.raises(edat.EdatDeadlockError):
+        # the task's dep can never be met once the timer is cancelled
+        rt.run(main, timeout=20)
+    assert res.get("cancelled") is True
+    assert res.get("again") is False
+    assert "fired" not in res
+    # a cancelled timer no longer delays quiescence until its deadline
+    assert time.monotonic() - t0 < 4.0
+
+
+def test_timer_cancel_after_firing_returns_false():
+    res = {}
+
+    def t(ctx, events):
+        res["fired"] = True
+
+    def main(ctx):
+        if ctx.rank == 0:
+            h = ctx.fire_after(0.05, edat.SELF, "tick")
+            ctx.submit(t, deps=[(edat.SELF, "tick")])
+            time.sleep(0.3)
+            res["cancelled"] = h.cancel()
+
+    run(1, main)
+    assert res["fired"] is True
+    assert res["cancelled"] is False      # too late: the timer already fired
+
+
+def test_reentrant_lock_recorded_and_autoreleased():
+    """A reentrant lock acquisition is recorded in the task's lock set, so
+    it is auto-released at task end (paper §IV.C)."""
+    res = {}
+
+    def t1(ctx, events):
+        ctx.lock("L")
+        ctx.lock("L")                      # reentrant: still held once
+        ctx.fire(edat.SELF, "go")
+        # NO explicit unlock: auto-release at task end must free it
+
+    def t2(ctx, events):
+        res["acquired"] = ctx.test_lock("L")
+        if res["acquired"]:
+            ctx.unlock("L")
+
+    def main(ctx):
+        ctx.submit(t1)
+        ctx.submit(t2, deps=[(edat.SELF, "go")])
+
+    run(1, main, workers=1)
+    assert res["acquired"] is True
 
 
 def test_timer_event():

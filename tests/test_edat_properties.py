@@ -10,7 +10,10 @@ Invariants checked on randomly generated well-formed programs:
 import threading
 from collections import defaultdict
 
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro import edat
 

@@ -2,7 +2,7 @@
 test of EDAT BFS against networkx on random graphs)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_optional import given, settings, st
 
 from repro.analytics import BespokeAnalytics, EdatAnalytics, InsituCfg
 from repro.graph import (EdatBFS, ReferenceBFS, build_csr, kronecker_edges,
