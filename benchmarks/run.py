@@ -20,7 +20,8 @@ def main(argv=None):
 
     print("== runtime micro-overheads (paper §V overhead discussion) ==")
     from benchmarks import runtime_micro
-    runtime_micro.run(out=os.path.join(args.outdir, "runtime_micro.json"))
+    runtime_micro.run(out=os.path.join(args.outdir, "runtime_micro.json"),
+                      transport="both")
 
     print("== Graph500 BFS: EDAT vs BSP reference (paper Fig 3) ==")
     from benchmarks import bfs_scaling

@@ -7,10 +7,18 @@ with the scheduling of tasks and managing of dependencies"):
   * persistent-task dispatch rate;
   * progress-mode comparison (dedicated thread vs idle-worker polling);
   * many-consumer routing: N persistent tasks with distinct eids — linear in
-    N through the indexed router (was quadratic with the linear scan).
+    N through the indexed router (was quadratic with the linear scan);
+  * --transport axis: the same event-throughput and ping-pong-latency
+    probes across OS processes over repro.net's SocketTransport
+    (``--transport socket`` or ``both``), so the bench JSON tracks
+    cross-process events/s and one-way latency alongside the in-proc
+    numbers.  Socket rates use the in-child wall time of ``Runtime.run``
+    (spawn + rendezvous excluded; reported separately as overhead).
 """
 from __future__ import annotations
 
+import argparse
+import functools
 import json
 import os
 import sys
@@ -130,20 +138,73 @@ def _routing_events_per_s(n_consumers, events_per=2):
     return n / dt
 
 
-def run(out: str = None):
-    r250 = _routing_events_per_s(250)
-    r1000 = _routing_events_per_s(1000)
-    res = {
-        "tasks_per_s": _tasks_per_s(),
-        "events_per_s_thread": _events_per_s(progress="thread"),
-        "events_per_s_workerpoll": _events_per_s(progress="worker"),
-        "events_per_s_batch": _events_per_s_batch(),
-        "event_latency_us": _pingpong_latency() * 1e6,
-        "routing_events_per_s_250": r250,
-        "routing_events_per_s_1000": r1000,
-        # ~1.0 when routing is linear in consumer count; << 1 when quadratic
-        "routing_scaling_1000_vs_250": r1000 / r250,
-    }
+# --------------------------------------------- cross-process (SocketTransport)
+# mains are module-level: spawned rank processes must be able to import them
+
+def _sock_sink_main(ctx, n_events=2000):
+    def sink(c, events):
+        pass
+
+    if ctx.rank == 0:
+        ctx.submit_persistent(sink, deps=[(1, "e")])
+    else:
+        for i in range(n_events):
+            ctx.fire(0, "e", i)
+
+
+def _sock_pingpong_main(ctx, n_iters=500):
+    def ping(c, events):
+        if events[0].data < n_iters:
+            c.fire(1, "ping", events[0].data + 1)
+
+    def pong(c, events):
+        c.fire(0, "pong", events[0].data)
+
+    if ctx.rank == 0:
+        ctx.submit_persistent(ping, deps=[(1, "pong")])
+        ctx.fire(1, "ping", 0)
+    else:
+        ctx.submit_persistent(pong, deps=[(0, "ping")])
+
+
+def _socket_events_per_s(n_events=2000):
+    t0 = time.monotonic()
+    stats = edat.launch_processes(
+        2, functools.partial(_sock_sink_main, n_events=n_events),
+        timeout=120)
+    overhead = time.monotonic() - t0 - stats["run_seconds"]
+    return n_events / stats["run_seconds"], overhead
+
+
+def _socket_pingpong_latency(n_iters=500):
+    stats = edat.launch_processes(
+        2, functools.partial(_sock_pingpong_main, n_iters=n_iters),
+        timeout=120, unconsumed="ignore")
+    return stats["run_seconds"] / (2 * n_iters)   # one-way latency
+
+
+def run(out: str = None, transport: str = "inproc"):
+    assert transport in ("inproc", "socket", "both")
+    res = {}
+    if transport in ("inproc", "both"):
+        r250 = _routing_events_per_s(250)
+        r1000 = _routing_events_per_s(1000)
+        res.update({
+            "tasks_per_s": _tasks_per_s(),
+            "events_per_s_thread": _events_per_s(progress="thread"),
+            "events_per_s_workerpoll": _events_per_s(progress="worker"),
+            "events_per_s_batch": _events_per_s_batch(),
+            "event_latency_us": _pingpong_latency() * 1e6,
+            "routing_events_per_s_250": r250,
+            "routing_events_per_s_1000": r1000,
+            # ~1.0 when routing is linear in consumer count; << 1 quadratic
+            "routing_scaling_1000_vs_250": r1000 / r250,
+        })
+    if transport in ("socket", "both"):
+        ev_s, spawn_s = _socket_events_per_s()
+        res["events_per_s_socket"] = ev_s
+        res["event_latency_us_socket"] = _socket_pingpong_latency() * 1e6
+        res["socket_spawn_overhead_s"] = spawn_s
     for k, v in res.items():
         print(f"  micro {k} = {v:.1f}" if v >= 10 else f"  micro {k} = {v:.3f}")
     if out:
@@ -154,4 +215,11 @@ def run(out: str = None):
 
 
 if __name__ == "__main__":
-    run(out=sys.argv[1] if len(sys.argv) > 1 else None)
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("out", nargs="?", default=None,
+                    help="optional path for the bench JSON")
+    ap.add_argument("--transport", choices=("inproc", "socket", "both"),
+                    default="inproc",
+                    help="which transport axis to measure (default inproc)")
+    a = ap.parse_args()
+    run(out=a.out, transport=a.transport)

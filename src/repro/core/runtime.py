@@ -12,6 +12,18 @@ and the detector blocks on that epoch instead of sleep-polling.  The
 four-counter logic itself (two consecutive idle polls with globally
 ``sent == received`` and empty mailboxes) is unchanged.
 
+A ``Runtime`` may host *all* ranks (threads-as-ranks over
+:class:`InProcTransport`) or a subset of them (one process per rank over
+:class:`repro.net.SocketTransport`, declared via the transport's
+``local_ranks``).  In the distributed case every cross-rank interaction —
+status polling for the Mattern detector, the termination broadcast, task
+failure propagation, detector wakeups — travels through the transport as
+CONTROL messages; rank 0 owns the detector, the other processes block until
+its ``terminate`` broadcast arrives.  Counter balancing uses the
+transport's per-peer sent/received vectors restricted to the alive ranks,
+so events exchanged with a failed process stay balanced without reading its
+(unreachable) memory.
+
 Beyond-paper (but anticipated in the paper's §VII "further work"): machine
 generated events — timer events (``fire_after``) and rank-failure events
 (``RANK_FAILED``) — and node-failure injection used by the fault-tolerant
@@ -169,10 +181,16 @@ class Runtime:
         assert progress in ("thread", "worker")
         assert unconsumed in ("error", "warn", "ignore")
         self.n_ranks = n_ranks
-        self.transport: InProcTransport = transport or InProcTransport(n_ranks)
-        self._sched = [Scheduler(r, n_ranks, self, workers_per_rank, progress)
-                       for r in range(n_ranks)]
-        self._ctxs = [Context(self, r) for r in range(n_ranks)]
+        self.transport: Transport = transport or InProcTransport(n_ranks)
+        self._distributed = bool(self.transport.distributed)
+        local = self.transport.local_ranks
+        self._local_ranks: List[int] = (sorted(local) if local is not None
+                                        else list(range(n_ranks)))
+        #: the rank that runs the Mattern detector and broadcasts terminate
+        self._det_rank = 0
+        self._sched = {r: Scheduler(r, n_ranks, self, workers_per_rank,
+                                    progress) for r in self._local_ranks}
+        self._ctxs = {r: Context(self, r) for r in self._local_ranks}
         self._progress_mode = progress
         self._unconsumed = unconsumed
         # retained as the detector's backstop wait cap (the detector is
@@ -196,12 +214,30 @@ class Runtime:
         self._timer_thread: Optional[threading.Thread] = None
         self._pending_timers = 0
         self.stats: Dict[str, Any] = {}
+        # distributed-termination plumbing (CONTROL-message protocol)
+        self._status_replies: List[dict] = []
+        self._status_cv = threading.Condition()
+        self._probe = 0                       # status-poll generation id
+        self._term_event = threading.Event()  # set by rank 0's broadcast
+        self._remote_stats: Dict[str, Any] = {}
+        self._remote_error: Optional[str] = None
+        self._remote_poke_mu = threading.Lock()
+        self._last_remote_poke = 0.0
+        if self._distributed:
+            # heartbeat/EOF peer-failure detection feeds RANK_FAILED
+            self.transport.on_peer_dead = self._on_peer_dead
+            set_deliver = getattr(self.transport, "set_deliver", None)
+            if set_deliver is not None and len(self._local_ranks) == 1:
+                # push mode: the transport's reader threads hand batches
+                # straight to delivery, skipping the progress-thread hop
+                only = self._local_ranks[0]
+                set_deliver(lambda msgs: self._handle_many(only, msgs))
         if (progress == "worker"
                 and type(self.transport).set_notify
                 is not Transport.set_notify):
             # the transport can wake idle workers on arrival; without a real
             # notify override the workers fall back to timed polling
-            for r in range(n_ranks):
+            for r in self._local_ranks:
                 self.transport.set_notify(r, self._sched[r]._notify_mail)
                 self._sched[r]._mail_hooked = True
 
@@ -217,6 +253,19 @@ class Runtime:
         backstop timeout."""
         if not force and not self._maybe_quiescent():
             return
+        if self._distributed and self._det_rank not in self._sched:
+            # the detector lives in another process: nudge it with a CONTROL
+            # poke (rate-limited — the backstop wait recovers a skipped one)
+            now = time.monotonic()
+            send = force
+            if not send:
+                with self._remote_poke_mu:
+                    if now - self._last_remote_poke >= 0.05:
+                        self._last_remote_poke = now
+                        send = True
+            if send:
+                self.transport.send(Message(CONTROL, self._local_ranks[0],
+                                            self._det_rank, ("poke", None)))
         with self._quiet_cv:
             self._epoch += 1
             self._quiet_cv.notify_all()
@@ -238,10 +287,17 @@ class Runtime:
 
     def _fire(self, src: int, target: Any, eid: str, data: Any, *,
               persistent: bool, ref: bool) -> None:
-        payload = data if ref else copy_payload(data)
+        # validated before the sent counter is touched: a non-transportable
+        # payload raises here, in the firing task, with balanced counters
+        self.transport.validate_payload(data)
         targets = self._targets(src, target)
+        # a serialising transport pickles every remote message synchronously
+        # inside send — that IS the fire-time snapshot, so the defensive
+        # deep-copy is only needed when a loopback target shares the object
+        copy_free = ref or (self.transport.serializes and src not in targets)
+        payload = data if copy_free else copy_payload(data)
         msgs = [Message(EVENT, src, t,
-                        Event(data=payload if (ref or len(targets) == 1)
+                        Event(data=payload if (copy_free or len(targets) == 1)
                               else copy_payload(payload),
                               source=src, eid=eid, persistent=persistent))
                 for t in targets]
@@ -263,12 +319,15 @@ class Runtime:
         for f in fires:
             target, eid = f[0], f[1]
             data = f[2] if len(f) > 2 else None
-            payload = data if ref else copy_payload(data)
+            self.transport.validate_payload(data)
             targets = self._targets(src, target)
+            copy_free = ref or (self.transport.serializes
+                                and src not in targets)
+            payload = data if copy_free else copy_payload(data)
             for t in targets:
                 msgs.append(Message(EVENT, src, t,
                                     Event(data=payload
-                                          if (ref or len(targets) == 1)
+                                          if (copy_free or len(targets) == 1)
                                           else copy_payload(payload),
                                           source=src, eid=eid,
                                           persistent=persistent)))
@@ -294,13 +353,8 @@ class Runtime:
 
     # ------------------------------------------------------------- progress
     def _progress_loop(self, rank: int) -> None:
-        recv_many = getattr(self.transport, "recv_many", None)
         while not self._shutdown and not self.transport.is_dead(rank):
-            if recv_many is not None:
-                msgs = recv_many(rank, timeout=0.5)
-            else:
-                msg = self.transport.recv(rank, timeout=0.5)
-                msgs = [msg] if msg is not None else []
+            msgs = self.transport.recv_many(rank, timeout=0.5)
             if msgs:
                 self._handle_many(rank, msgs)
 
@@ -323,11 +377,56 @@ class Runtime:
     def _handle_control(self, rank: int, msg: Message) -> None:
         tag, data = msg.payload
         if tag == "status?":
-            st = self._sched[rank].status()
-            st["rank"] = rank
+            st = self._local_status(rank)
+            st["probe"] = data
+            if self._distributed and msg.src not in self._sched:
+                # detector lives in another process: reply over the wire
+                self.transport.send(
+                    Message(CONTROL, rank, msg.src, ("status!", st)))
+            else:
+                with self._status_cv:
+                    self._status_replies.append(st)
+                    self._status_cv.notify_all()
+        elif tag == "status!":
             with self._status_cv:
-                self._status_replies.append(st)
+                self._status_replies.append(data)
                 self._status_cv.notify_all()
+        elif tag == "poke":
+            with self._quiet_cv:
+                self._epoch += 1
+                self._quiet_cv.notify_all()
+        elif tag == "abort":
+            # a task failed in another process; the detector returns as soon
+            # as it observes the error
+            with self._err_mu:
+                if self._error is None:
+                    self._error = EdatTaskError(data)
+            self._poke(force=True)
+        elif tag == "terminate":
+            self._remote_stats = data.get("stats") or {}
+            self._remote_error = data.get("error")
+            self._term_event.set()
+
+    def _local_status(self, rank: int) -> dict:
+        """One rank's status reply, extended with the per-process state the
+        distributed detector cannot read directly (timers, transport drop
+        counter, mailbox depth, per-peer sent/received vectors).  Process-
+        wide quantities are reported by the lowest local rank only, so
+        summing replies never multi-counts."""
+        st = self._sched[rank].status()
+        st["rank"] = rank
+        st["mailbox"] = self.transport.pending(rank)
+        if rank == self._local_ranks[0]:
+            with self._timer_cv:
+                st["timers"] = self._pending_timers
+            st["dropped"] = self.transport.dropped
+            if self._distributed:
+                st["sent_to"] = self.transport.sent_vector()
+                st["recv_from"] = self.transport.recv_vector()
+        else:
+            st["timers"] = 0
+            st["dropped"] = 0
+        return st
 
     # --------------------------------------------------------------- timers
     def _fire_after(self, src: int, delay: float, target: Any, eid: str,
@@ -342,6 +441,7 @@ class Runtime:
                 raise ValueError(f"fire target rank {dst} out of range "
                                  f"[0, {self.n_ranks})")
         tid = next(self._timer_ids)
+        self.transport.validate_payload(data)
         payload = copy_payload(data)
         with self._timer_cv:
             heapq.heappush(self._timers,
@@ -400,25 +500,52 @@ class Runtime:
         """Simulate node failure: drop the rank and notify survivors with a
         machine-generated RANK_FAILED event (paper §VII further work)."""
         self.transport.mark_dead(rank)
-        self._sched[rank].stop()
+        if rank in self._sched:
+            self._sched[rank].stop()
         # the failure notification is machine-generated at each *survivor*
         # (the dead rank cannot send), sourced from the survivor itself
-        for r in range(self.n_ranks):
+        for r in self._local_ranks:
             if r != rank and not self.transport.is_dead(r):
                 self._fire_sys(r, r, RANK_FAILED, rank)
         self._poke(force=True)  # alive-set changed under the detector
+
+    def _on_peer_dead(self, rank: int) -> None:
+        """Transport failure-detector callback (distributed): a peer process
+        stopped heartbeating or its connection broke.  Mirrors
+        :meth:`kill_rank` for the local ranks; every surviving process runs
+        the same notification, so each alive rank sees one RANK_FAILED."""
+        for r in self._local_ranks:
+            if r != rank and not self.transport.is_dead(r):
+                self._fire_sys(r, r, RANK_FAILED, rank)
+        if (self._distributed and rank == self._det_rank
+                and self._det_rank not in self._sched):
+            # the termination coordinator died: nobody will ever broadcast
+            # terminate — fail this process instead of hanging to timeout
+            with self._err_mu:
+                if self._error is None:
+                    self._error = EdatTaskError(
+                        f"rank {rank} (termination coordinator) failed")
+            self._term_event.set()
+        self._poke(force=True)
 
     def is_dead(self, rank: int) -> bool:
         return self.transport.is_dead(rank)
 
     # -------------------------------------------------------------- failure
     def _task_failed(self, rank: int, inst, exc: BaseException) -> None:
+        first = False
         with self._err_mu:
             if self._error is None:
                 self._error = EdatTaskError(
                     f"task {inst.name or inst.fn.__name__!r} on rank {rank} "
                     f"raised {type(exc).__name__}: {exc}")
                 self._error.__cause__ = exc
+                first = True
+        if first and self._distributed and self._det_rank not in self._sched:
+            # tell the detector process; it broadcasts terminate with the
+            # error so every process exits instead of hanging to timeout
+            self.transport.send(Message(CONTROL, rank, self._det_rank,
+                                        ("abort", str(self._error))))
         self._poke(force=True)  # the detector returns as soon as it sees it
 
     def _ctx(self, rank: int) -> Context:
@@ -427,16 +554,19 @@ class Runtime:
     # ------------------------------------------------------------------ run
     def run(self, main: Callable[[Context], None],
             timeout: float = 120.0) -> Dict[str, Any]:
-        """Run ``main(ctx)`` SPMD on every rank; return when the paper's four
-        termination conditions (§II.E) hold globally.  Equivalent to
-        ``edatInit(); main(); edatFinalise()``."""
-        self._status_replies: List[dict] = []
-        self._status_cv = threading.Condition()
+        """Run ``main(ctx)`` SPMD on every local rank; return when the
+        paper's four termination conditions (§II.E) hold globally.
+        Equivalent to ``edatInit(); main(); edatFinalise()``.  With a
+        distributed transport each participating process calls ``run`` with
+        the same ``main``; rank 0's process detects global termination and
+        broadcasts it to the others."""
+        with self._status_cv:
+            self._status_replies = []
 
-        for s in self._sched:
+        for s in self._sched.values():
             s.start()
         if self._progress_mode == "thread":
-            for r in range(self.n_ranks):
+            for r in self._local_ranks:
                 t = threading.Thread(target=self._progress_loop, args=(r,),
                                      daemon=True, name=f"edat-p{r}")
                 self._prog_threads.append(t)
@@ -454,49 +584,102 @@ class Runtime:
             finally:
                 self._sched[rank].set_main_done()
 
-        for r in range(self.n_ranks):
+        for r in self._local_ranks:
             t = threading.Thread(target=_main, args=(r,), daemon=True,
                                  name=f"edat-main{r}")
             self._main_threads.append(t)
             t.start()
 
         try:
-            self._await_termination(timeout)
+            if self._det_rank in self._sched or not self._distributed:
+                try:
+                    self._await_termination(timeout)
+                except BaseException as e:
+                    self._broadcast_terminate(f"{type(e).__name__}: {e}")
+                    raise
+                else:
+                    err = self._error
+                    self._broadcast_terminate(
+                        None if err is None
+                        else f"{type(err).__name__}: {err}")
+            else:
+                self._await_remote_termination(timeout)
         finally:
             self._shutdown = True
-            for s in self._sched:
+            for s in self._sched.values():
                 s.stop()
-            for r in range(self.n_ranks):
+            for r in self._local_ranks:
                 self.transport.wake(r)
             with self._timer_cv:
                 self._timer_cv.notify_all()
             for t in self._main_threads:
                 t.join(5.0)
-            for s in self._sched:
+            for s in self._sched.values():
                 s.join()
+            self.transport.close()
         if self._error is not None:
             raise self._error
         return self.stats
 
+    def _broadcast_terminate(self, error: Optional[str]) -> None:
+        """Rank 0 (detector) -> everyone else: the run is over (CONTROL)."""
+        if not self._distributed:
+            return
+        payload = {"stats": dict(self.stats), "error": error}
+        for r in range(self.n_ranks):
+            if r not in self._sched and not self.is_dead(r):
+                self.transport.send(Message(CONTROL, self._det_rank, r,
+                                            ("terminate", payload)))
+
+    def _await_remote_termination(self, timeout: float) -> None:
+        """Non-detector process: block until rank 0 broadcasts terminate
+        (or a local/peer failure makes waiting pointless)."""
+        deadline = time.monotonic() + timeout
+        while not self._term_event.wait(
+                min(0.25, max(0.0, deadline - time.monotonic()))):
+            if time.monotonic() >= deadline:
+                if self._error is not None:
+                    return  # raised by run() after cleanup
+                raise TimeoutError(
+                    f"rank(s) {self._local_ranks} did not receive the "
+                    f"termination broadcast within {timeout}s")
+        if self._remote_stats:
+            self.stats.update(self._remote_stats)
+        err = self._remote_error
+        if err is not None and self._error is None:
+            if err.startswith("EdatDeadlockError"):
+                self._error = EdatDeadlockError(err)
+            else:
+                self._error = EdatTaskError(err)
+
     # ------------------------------------------------- termination detector
     def _poll_status(self) -> List[dict]:
         alive = [r for r in range(self.n_ranks) if not self.is_dead(r)]
-        if self._progress_mode == "thread":
+        if self._progress_mode == "thread" or self._distributed:
+            # formal poll through the transport: remote ranks answer with a
+            # CONTROL status! reply; local ranks append directly.  Replies
+            # carry the probe id so a late reply from a previous poll can
+            # never satisfy (or pollute) this one.
+            self._probe += 1
+            probe = self._probe
+            src = self._det_rank if self._distributed else -1
             with self._status_cv:
                 self._status_replies = []
             for r in alive:
-                self.transport.send(Message(CONTROL, -1, r, ("status?", None)))
+                self.transport.send(Message(CONTROL, src, r,
+                                            ("status?", probe)))
             deadline = time.monotonic() + 1.0
             with self._status_cv:
-                while len(self._status_replies) < len(alive):
+                while True:
+                    got = [st for st in self._status_replies
+                           if st.get("probe") == probe]
                     remaining = deadline - time.monotonic()
-                    if remaining <= 0:
-                        break
+                    if len(got) >= len(alive) or remaining <= 0:
+                        return got
                     self._status_cv.wait(remaining)
-                return list(self._status_replies)
-        # worker-poll mode: workers may all be busy; read directly (in-proc
-        # shortcut is safe here because status() takes the scheduler lock)
-        return [dict(self._sched[r].status(), rank=r) for r in alive]
+        # in-proc worker-poll mode: workers may all be busy; read directly
+        # (safe here because status() takes the scheduler lock)
+        return [self._local_status(r) for r in alive]
 
     def _maybe_quiescent(self) -> bool:
         """Lock-free pre-check gating the formal status poll.  Dirty reads
@@ -506,7 +689,7 @@ class Runtime:
         the system is busy (e.g. it never sends CONTROL traffic in the
         middle of a ping-pong exchange)."""
         s = rcv = 0
-        for r in range(self.n_ranks):
+        for r in self._local_ranks:
             sch = self._sched[r]
             if not self.is_dead(r):
                 if (sch._ready or sch._running or sch._resuming
@@ -516,6 +699,10 @@ class Runtime:
             rcv += sch.received
         if self._pending_timers:
             return False
+        if self._distributed:
+            # only local state is readable: locally quiet is the best this
+            # gate can certify — the formal CONTROL poll decides globally
+            return True
         # no mailbox probe here: an undelivered user event already shows as
         # s > rcv (sent counts at fire, received at delivery), and the formal
         # poll re-checks mailboxes authoritatively — probing them here would
@@ -528,7 +715,7 @@ class Runtime:
         detector blocks on the activity epoch (woken by idle transitions)
         instead of sleep-polling."""
         t0 = time.monotonic()
-        prev: Optional[Tuple[int, int]] = None
+        prev: Optional[Tuple[int, int, int]] = None
         while True:
             if self._error is not None:
                 return
@@ -551,35 +738,65 @@ class Runtime:
             if len(sts) < len(alive):
                 prev = None
                 continue
-            with self._timer_cv:
-                timers = self._pending_timers
-            mailbox = sum(self.transport.pending(r) for r in alive)
-            s = sum(x["sent"] for x in sts)
-            rcv = sum(x["received"] for x in sts)
-            # dead ranks: include their final counter snapshots so events
-            # they exchanged before failing stay balanced
-            for r in range(self.n_ranks):
-                if self.is_dead(r):
-                    s += self._sched[r].sent
-                    rcv += self._sched[r].received
-            rcv += self.transport.dropped
+            if self._distributed:
+                # cross-process balance: per-peer transport vectors from the
+                # replies, restricted to alive columns — events exchanged
+                # with a failed process cancel on both sides without ever
+                # reading its (unreachable) counters
+                alive_set = set(alive)
+                s = sum(v for x in sts
+                        for j, v in enumerate(x.get("sent_to", ()))
+                        if j in alive_set)
+                rcv = sum(v for x in sts
+                          for j, v in enumerate(x.get("recv_from", ()))
+                          if j in alive_set)
+                timers = sum(x["timers"] for x in sts)
+                mailbox = sum(x["mailbox"] for x in sts)
+            else:
+                with self._timer_cv:
+                    timers = self._pending_timers
+                mailbox = sum(self.transport.pending(r) for r in alive)
+                s = sum(x["sent"] for x in sts)
+                rcv = sum(x["received"] for x in sts)
+                # dead ranks: include their final counter snapshots so
+                # events they exchanged before failing stay balanced
+                for r in range(self.n_ranks):
+                    if self.is_dead(r):
+                        s += self._sched[r].sent
+                        rcv += self._sched[r].received
+                rcv += self.transport.dropped
             all_idle = all(x["idle"] for x in sts) and mailbox == 0 and timers == 0
             if not all_idle or s != rcv:
                 prev = None
+                if self._distributed:
+                    # the local-only quiescence gate cannot veto remote
+                    # traffic, so a busy exchange would otherwise trigger a
+                    # formal CONTROL poll per idle transition; damp to at
+                    # most ~50 polls/s (adds <=20 ms to real termination)
+                    time.sleep(0.02)
                 with self._quiet_cv:
                     if self._epoch == epoch and self._error is None:
                         self._quiet_cv.wait(min(self._poll_interval,
                                                 remaining))
                 continue
-            if prev == (s, rcv):
+            if prev == (s, rcv, len(alive)):
                 # two consecutive stable, idle, balanced polls -> quiescent
                 parked = sum(x["parked"] for x in sts)
                 unmet = sum(x["unmet"] for x in sts)
                 stored = sum(x["stored"] for x in sts)
+                if self._distributed:
+                    # scheduler counters (user-event view) of alive ranks;
+                    # a dead process's counters are unreachable
+                    ev_s = sum(x["sent"] for x in sts)
+                    ev_r = sum(x["received"] for x in sts)
+                    dropped = sum(x["dropped"] for x in sts)
+                else:
+                    ev_s, ev_r = s, rcv
+                    dropped = self.transport.dropped
                 self.stats.update(
-                    events_sent=s, events_received=rcv,
+                    events_sent=ev_s, events_received=ev_r,
                     tasks_executed=sum(x["executed"] for x in sts),
-                    events_dropped=self.transport.dropped,
+                    events_dropped=dropped,
                     unconsumed_events=stored)
                 if parked or unmet:
                     raise EdatDeadlockError(
@@ -596,4 +813,4 @@ class Runtime:
                 return
             # first stable poll: confirm immediately — the counters must
             # hold identical across two polls for quiescence
-            prev = (s, rcv)
+            prev = (s, rcv, len(alive))

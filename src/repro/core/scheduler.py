@@ -287,8 +287,9 @@ class Scheduler:
 
     def deliver_many(self, evs) -> None:
         """Process arriving events under one lock round-trip: offer each to
-        the router (precedence order), else store.  Caller: progress thread
-        / polling worker."""
+        the router (precedence order), else store.  Caller: progress thread,
+        polling worker, or a distributed transport's reader thread
+        (push-mode delivery) — thread-safe under the scheduler lock."""
         ready: List[Instance] = []
         wake: List[Waiter] = []
         refires: List[Event] = []

@@ -1,27 +1,41 @@
 """Pluggable transport layer (paper §II.F).
 
 The paper's EDAT library ships an MPI transport behind a pluggable interface;
-"other mechanisms can be easily added".  Here the reference implementation is
-an in-process transport (ranks are threads with private object spaces), which
-preserves the *semantics* that matter for correctness arguments:
+"other mechanisms can be easily added".  Two transports ship here:
+
+* :class:`InProcTransport` — ranks are threads with private object spaces in
+  one process.  The reference implementation: zero-copy mailboxes, payloads
+  deep-copied at fire time, ``kill_rank`` failure simulation.
+* :class:`repro.net.SocketTransport` — ranks are separate OS processes
+  exchanging length-prefixed pickled frames over TCP, with a heartbeat-based
+  peer failure detector.  Built by :mod:`repro.net.bootstrap` and launched
+  by ``python -m repro.net.launch`` / :func:`repro.net.launch_processes`.
+
+Both preserve the semantics that the correctness arguments rely on:
 
 * per-(src,dst) FIFO delivery (paper §II.B ordering guarantee),
-* payloads copied at fire time (no silent shared-memory aliasing),
+* fire-and-forget payloads (copied or serialised at fire time),
 * message counting hooks for distributed termination (Mattern four-counter),
-* sends to failed ranks are dropped (node-failure simulation).
+* sends to failed ranks are dropped (node-failure handling).
 
 Batching: :meth:`Transport.send_many` enqueues a whole fire-batch with one
-lock round-trip per destination, and :meth:`InProcTransport.drain` pops every
-pending message in one round-trip — the runtime's progress path uses both so
-a burst of N events costs O(destinations) lock acquisitions, not O(N).
+lock (or syscall) round-trip per destination, and :meth:`Transport.drain` /
+:meth:`Transport.recv_many` pop every pending message in one round-trip —
+the runtime's progress path uses these so a burst of N events costs
+O(destinations) round-trips, not O(N).  A minimal transport only has to
+implement ``send`` / ``recv`` / ``wake``; the base class supplies working
+(looping) batch defaults and inert failure/notification hooks, and the
+runtime falls back to timed polling in worker-progress mode.
 
 Notification: :meth:`Transport.set_notify` registers a per-rank callback
 invoked after messages are enqueued (outside the mailbox lock).  In
 idle-worker progress mode the runtime points it at the scheduler's condition
 variable so an idle worker wakes on arrival instead of sleep-polling.
 
-A real multi-host deployment would implement :class:`Transport` over
-``jax.distributed`` / gRPC; nothing above this layer would change.
+Distributed transports (``distributed = True``) additionally declare which
+ranks live in this process (``local_ranks``) and keep per-peer sent/received
+vectors so the termination detector can balance counters across processes
+through CONTROL messages instead of shared memory.
 """
 from __future__ import annotations
 
@@ -46,6 +60,16 @@ class Message:
 
 class Transport(abc.ABC):
     """Abstract transport: point-to-point ordered messaging between ranks."""
+
+    #: True when ranks live in separate processes; the runtime then speaks
+    #: to remote ranks exclusively through CONTROL messages.
+    distributed: bool = False
+    #: Ranks hosted by this process (None: all ranks are local, in-proc).
+    local_ranks = None
+    #: True when ``send`` serialises the message synchronously (the wire
+    #: encoding *is* the fire-time snapshot): the runtime then skips the
+    #: defensive deep-copy for remote-only fires.
+    serializes: bool = False
 
     @abc.abstractmethod
     def send(self, msg: Message) -> bool:
@@ -76,11 +100,52 @@ class Transport(abc.ABC):
             out.append(m)
         return out
 
+    def recv_many(self, rank: int,
+                  timeout: Optional[float]) -> List[Message]:
+        """Blocking batched receive: wait up to ``timeout`` for at least one
+        message, then return everything pending.  The default composes one
+        blocking :meth:`recv` with a :meth:`drain`; implementations should
+        pop the whole mailbox in a single round-trip."""
+        first = self.recv(rank, timeout)
+        if first is None:
+            return []
+        return [first, *self.drain(rank)]
+
     def set_notify(self, rank: int, fn: Optional[Callable[[], None]]) -> None:
         """Register a callback invoked after message arrival for ``rank``
         (no-op by default; callback must not assume any lock is held).
         Transports that do not override this cannot wake idle workers, so
         the runtime falls back to timed polling in worker-progress mode."""
+
+    def validate_payload(self, data: Any) -> None:
+        """Raise ``TypeError`` if ``data`` cannot travel on this transport.
+        Called at fire time, *before* any termination counter is touched, so
+        a bad payload fails in the firing task with a clear error instead of
+        crashing a worker/progress thread mid-delivery.  No-op by default
+        (in-proc payloads only need to be copyable)."""
+
+    # -- failure handling (inert defaults for minimal transports) -----------
+    def is_dead(self, rank: int) -> bool:
+        """True if ``rank`` is known to have failed."""
+        return False
+
+    def mark_dead(self, rank: int) -> None:
+        """Locally declare ``rank`` failed (failure injection / detection)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support failure injection")
+
+    @property
+    def dropped(self) -> int:
+        """Messages dropped because their destination was dead."""
+        return 0
+
+    def pending(self, rank: int) -> int:
+        """Undelivered messages queued for ``rank`` (0 if unknown; the
+        sent/received counters still catch in-flight events)."""
+        return 0
+
+    def close(self) -> None:
+        """Release transport resources (sockets, threads).  No-op default."""
 
 
 class InProcTransport(Transport):

@@ -1,3 +1,8 @@
 """Convenience alias: ``from repro import edat``."""
 from repro.core import *  # noqa: F401,F403
-from repro.core import __all__  # noqa: F401
+from repro.core import __all__ as _core_all
+from repro.net import (ProcessGroup, SocketTransport,  # noqa: F401
+                       launch_processes)
+
+__all__ = list(_core_all) + ["ProcessGroup", "SocketTransport",
+                             "launch_processes"]

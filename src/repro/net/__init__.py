@@ -1,0 +1,26 @@
+"""repro.net — multi-process socket transport + rank launcher.
+
+Makes the EDAT reproduction *actually distributed*: ranks as OS processes
+exchanging length-prefixed pickled frames over TCP, a rank-0 rendezvous
+(:mod:`~repro.net.bootstrap`), a heartbeat peer-failure detector feeding
+the runtime's RANK_FAILED machinery, and a spawn-based local launcher
+(:mod:`~repro.net.launch`, also ``python -m repro.net.launch``).
+
+Nothing above the :class:`~repro.core.transport.Transport` interface
+changes: the same ``main(ctx)`` runs threads-as-ranks in one process or
+SPMD across processes.
+"""
+from .bootstrap import bootstrap, bootstrap_from_env
+from .socket_transport import SocketTransport
+
+__all__ = ["SocketTransport", "bootstrap", "bootstrap_from_env",
+           "ProcessGroup", "launch_processes"]
+
+
+def __getattr__(name):
+    # lazy: `python -m repro.net.launch` must be able to import the package
+    # without the package importing repro.net.launch first (runpy warning)
+    if name in ("ProcessGroup", "launch_processes"):
+        from . import launch
+        return getattr(launch, name)
+    raise AttributeError(name)

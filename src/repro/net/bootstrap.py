@@ -1,0 +1,134 @@
+"""Rendezvous: wire up all-pairs connections for :class:`SocketTransport`.
+
+Coordinator pattern (rank 0 + environment addressing, the usual launcher
+contract of distributed runtimes):
+
+1. every rank opens a listening socket on an ephemeral port;
+2. rank 0 additionally listens on the well-known *coordinator* address;
+3. ranks 1..n-1 dial the coordinator and register their listen address;
+4. rank 0 replies to each with the complete ``{rank: address}`` map;
+5. each rank dials every lower-numbered rank (identified by a HELLO frame),
+   accepts from every higher-numbered one — one TCP connection per
+   unordered pair, used bidirectionally.
+
+Because every rank listens *before* registering with the coordinator, no
+peer can learn an address that is not yet accepting — dialing needs no
+retry loop (a short one is kept for OS-level accept-queue hiccups).
+
+Environment contract (used by ``python -m repro.net.launch`` and usable by
+any external process manager, e.g. one process per node under slurm/k8s):
+
+* ``EDAT_RANK``    — this process's rank;
+* ``EDAT_NRANKS``  — world size;
+* ``EDAT_COORD``   — ``host:port`` of the rank-0 coordinator;
+* ``EDAT_HOST``    — optional bind/advertise host (default ``127.0.0.1``).
+"""
+from __future__ import annotations
+
+import os
+import socket
+import time
+from typing import Dict, Tuple
+
+from . import frames
+from .socket_transport import SocketTransport
+
+Addr = Tuple[str, int]
+
+
+def _listener(host: str, port: int = 0, backlog: int = 64) -> socket.socket:
+    srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    srv.bind((host, port))
+    srv.listen(backlog)
+    return srv
+
+
+def _dial(addr: Addr, deadline: float) -> socket.socket:
+    last = None
+    while time.monotonic() < deadline:
+        try:
+            return socket.create_connection(
+                addr, timeout=max(0.1, deadline - time.monotonic()))
+        except OSError as e:
+            last = e
+            time.sleep(0.05)
+    raise RuntimeError(f"bootstrap: could not connect to {addr}: {last}")
+
+
+def _configure(sock: socket.socket) -> socket.socket:
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    sock.settimeout(None)
+    return sock
+
+
+def bootstrap(rank: int, n_ranks: int, coord_addr: Addr, *,
+              host: str = "127.0.0.1", timeout: float = 30.0,
+              hb_interval: float = 0.5,
+              hb_timeout: float = 5.0) -> SocketTransport:
+    """Run the rendezvous for ``rank`` and return a connected transport."""
+    if n_ranks == 1:
+        return SocketTransport(0, 1, {}, hb_interval=hb_interval,
+                               hb_timeout=hb_timeout)
+    deadline = time.monotonic() + timeout
+    listener = _listener(host)
+    my_addr: Addr = (host, listener.getsockname()[1])
+
+    # -- address exchange through the coordinator ---------------------------
+    if rank == 0:
+        coord = _listener(coord_addr[0], coord_addr[1])
+        coord.settimeout(timeout)
+        addrs: Dict[int, Addr] = {0: my_addr}
+        conns = []
+        try:
+            while len(addrs) < n_ranks:
+                c, _ = coord.accept()
+                c.settimeout(timeout)
+                tag, peer_rank, peer_addr = frames.recv_frame(c)
+                assert tag == frames.HELLO
+                addrs[peer_rank] = tuple(peer_addr)
+                conns.append(c)
+            for c in conns:
+                frames.send_frame(c, ("addrs", addrs))
+        finally:
+            for c in conns:
+                c.close()
+            coord.close()
+    else:
+        c = _dial(coord_addr, deadline)
+        c.settimeout(timeout)
+        try:
+            frames.send_frame(c, (frames.HELLO, rank, my_addr))
+            tag, addrs = frames.recv_frame(c)
+            assert tag == "addrs"
+            addrs = {int(r): tuple(a) for r, a in addrs.items()}
+        finally:
+            c.close()
+
+    # -- all-pairs mesh: dial down, accept up -------------------------------
+    peers: Dict[int, socket.socket] = {}
+    for q in range(rank):
+        s = _dial(addrs[q], deadline)
+        frames.send_frame(s, (frames.HELLO, rank))
+        peers[q] = _configure(s)
+    listener.settimeout(timeout)
+    try:
+        while len(peers) < n_ranks - 1:
+            s, _ = listener.accept()
+            s.settimeout(timeout)
+            tag, peer_rank = frames.recv_frame(s)
+            assert tag == frames.HELLO and peer_rank > rank
+            peers[peer_rank] = _configure(s)
+    finally:
+        listener.close()
+    return SocketTransport(rank, n_ranks, peers, hb_interval=hb_interval,
+                           hb_timeout=hb_timeout)
+
+
+def bootstrap_from_env(**kw) -> SocketTransport:
+    """Rendezvous addressed entirely by ``EDAT_*`` environment variables."""
+    rank = int(os.environ["EDAT_RANK"])
+    n_ranks = int(os.environ["EDAT_NRANKS"])
+    host, port = os.environ["EDAT_COORD"].rsplit(":", 1)
+    kw.setdefault("host", os.environ.get("EDAT_HOST", "127.0.0.1"))
+    return bootstrap(rank, n_ranks, (host, int(port)), **kw)

@@ -1,0 +1,84 @@
+"""Wire format for :class:`repro.net.SocketTransport`.
+
+A frame is a 4-byte big-endian length prefix followed by a pickled Python
+object.  The object is always a tuple tagged with its kind:
+
+* ``("msg", Message)`` — a runtime :class:`~repro.core.transport.Message`
+  (EVENT or CONTROL);
+* ``("hello", rank)`` — connection preamble identifying the dialing peer;
+* ``("hb",)`` — heartbeat (liveness only, never surfaced to the runtime);
+* ``("bye",)`` — clean close: the peer is shutting down deliberately, so
+  the subsequent EOF must *not* be reported as a failure.
+
+Pickle (highest protocol) keeps arbitrary user payloads working without a
+schema; frames from one sender are written under a per-connection lock and
+read by a single reader thread, so per-(src,dst) FIFO order is exactly the
+TCP byte order.
+"""
+from __future__ import annotations
+
+import pickle
+import socket
+import struct
+from typing import Any, Optional
+
+_LEN = struct.Struct(">I")
+
+#: refuse absurd frames (corruption guard), 1 GiB
+MAX_FRAME = 1 << 30
+
+MSG = "msg"
+HELLO = "hello"
+HEARTBEAT = "hb"
+BYE = "bye"
+
+
+def encode(obj: Any) -> bytes:
+    """Serialise ``obj`` into one length-prefixed frame."""
+    data = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    return _LEN.pack(len(data)) + data
+
+
+def send_frame(sock: socket.socket, obj: Any) -> None:
+    sock.sendall(encode(obj))
+
+
+def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    """Read exactly ``n`` bytes; None on EOF (including mid-frame EOF)."""
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            return None
+        buf += chunk
+    return bytes(buf)
+
+
+def recv_frame(sock: socket.socket) -> Optional[Any]:
+    """Read one frame; None on EOF."""
+    head = _recv_exact(sock, _LEN.size)
+    if head is None:
+        return None
+    (n,) = _LEN.unpack(head)
+    if n > MAX_FRAME:
+        raise ValueError(f"frame length {n} exceeds MAX_FRAME")
+    body = _recv_exact(sock, n)
+    if body is None:
+        return None
+    return pickle.loads(body)
+
+
+def recv_frame_buffered(f) -> Optional[Any]:
+    """Like :func:`recv_frame` but over a buffered binary file object
+    (``sock.makefile("rb")``) — a burst of small frames costs one syscall,
+    not two per frame."""
+    head = f.read(_LEN.size)
+    if len(head) < _LEN.size:
+        return None
+    (n,) = _LEN.unpack(head)
+    if n > MAX_FRAME:
+        raise ValueError(f"frame length {n} exceeds MAX_FRAME")
+    body = f.read(n)
+    if len(body) < n:
+        return None
+    return pickle.loads(body)

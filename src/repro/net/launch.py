@@ -1,0 +1,223 @@
+"""Multi-process rank launcher for SocketTransport runs.
+
+API (paper's ``mpiexec`` role, for one machine)::
+
+    from repro import edat
+
+    def main(ctx):            # must be importable (module level): children
+        ...                   # are spawned, not forked
+
+    stats = edat.launch_processes(4, main)          # blocks, returns stats
+
+or, for failure-injection control::
+
+    pg = ProcessGroup(4, main)
+    pg.start()
+    pg.kill(3)                # SIGKILL: the heartbeat detector notices
+    stats = pg.wait()
+
+CLI::
+
+    python -m repro.net.launch --ranks 4 examples/net_pingpong.py:main
+    python -m repro.net.launch -n 2 repro.something:main --progress worker
+
+The spec is ``module.path:callable`` or ``path/to/file.py:callable``
+(callable defaults to ``main``); each child resolves it independently, so
+file-based specs need no importable package.  Children rendezvous through
+the rank-0 coordinator (:mod:`repro.net.bootstrap`); the parent only picks
+the coordinator port, spawns, and reaps.
+
+Every child also exports ``EDAT_RANK`` / ``EDAT_NRANKS`` / ``EDAT_COORD``
+so user code can introspect its placement.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import importlib.util
+import multiprocessing as mp
+import os
+import socket
+import sys
+import time
+from typing import Any, Callable, Dict, Optional, Union
+
+MainSpec = Union[Callable, str]
+
+
+def _free_port(host: str = "127.0.0.1") -> int:
+    with socket.socket() as s:
+        s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        s.bind((host, 0))
+        return s.getsockname()[1]
+
+
+def _resolve_spec(spec: str) -> Callable:
+    """``pkg.mod:fn`` or ``path/file.py:fn`` (fn defaults to ``main``)."""
+    target, _, fn_name = spec.partition(":")
+    fn_name = fn_name or "main"
+    if target.endswith(".py") or os.sep in target:
+        name = "_edat_main_" + os.path.splitext(os.path.basename(target))[0]
+        s = importlib.util.spec_from_file_location(name, target)
+        if s is None:
+            raise ValueError(f"cannot load {target!r}")
+        mod = importlib.util.module_from_spec(s)
+        sys.modules[name] = mod
+        s.loader.exec_module(mod)
+    else:
+        mod = importlib.import_module(target)
+    fn = getattr(mod, fn_name, None)
+    if not callable(fn):
+        raise ValueError(f"{spec!r}: no callable {fn_name!r} in {target!r}")
+    return fn
+
+
+def _child_entry(rank: int, n_ranks: int, coord_addr, main: MainSpec,
+                 runtime_kwargs: Dict[str, Any], run_timeout: float,
+                 hb: Dict[str, float], result_q) -> None:
+    os.environ["EDAT_RANK"] = str(rank)
+    os.environ["EDAT_NRANKS"] = str(n_ranks)
+    os.environ["EDAT_COORD"] = f"{coord_addr[0]}:{coord_addr[1]}"
+    try:
+        from repro.core.runtime import Runtime
+        from .bootstrap import bootstrap
+        if isinstance(main, str):
+            main = _resolve_spec(main)
+        transport = bootstrap(rank, n_ranks, coord_addr, **hb)
+        rt = Runtime(n_ranks, transport=transport, **runtime_kwargs)
+        t0 = time.monotonic()
+        stats = rt.run(main, timeout=run_timeout)
+        if rank == 0:
+            stats = dict(stats)
+            stats["run_seconds"] = time.monotonic() - t0
+            result_q.put(("ok", stats))
+    except BaseException as e:  # noqa: BLE001 - report, then non-zero exit
+        try:
+            result_q.put(("err", rank, f"{type(e).__name__}: {e}"))
+        except Exception:
+            pass
+        raise SystemExit(1)
+
+
+class ProcessGroup:
+    """A set of spawned rank processes sharing one SocketTransport world."""
+
+    def __init__(self, n_ranks: int, main: MainSpec, *,
+                 run_timeout: float = 120.0,
+                 hb_interval: float = 0.5, hb_timeout: float = 5.0,
+                 host: str = "127.0.0.1",
+                 **runtime_kwargs: Any):
+        self.n_ranks = n_ranks
+        self.main = main
+        self.run_timeout = run_timeout
+        self.runtime_kwargs = runtime_kwargs
+        self._hb = {"hb_interval": hb_interval, "hb_timeout": hb_timeout}
+        self._host = host
+        self._procs: Dict[int, mp.process.BaseProcess] = {}
+        self._killed = set()
+        self._q = None
+
+    def start(self) -> "ProcessGroup":
+        ctx = mp.get_context("spawn")
+        self._q = ctx.SimpleQueue()
+        coord = (self._host, _free_port(self._host))
+        for r in range(self.n_ranks):
+            p = ctx.Process(
+                target=_child_entry,
+                args=(r, self.n_ranks, coord, self.main,
+                      self.runtime_kwargs, self.run_timeout, self._hb,
+                      self._q),
+                daemon=False, name=f"edat-rank{r}")
+            p.start()
+            self._procs[r] = p
+        return self
+
+    def kill(self, rank: int) -> None:
+        """SIGKILL a rank's process — the cross-process equivalent of
+        ``Runtime.kill_rank``; survivors' heartbeat detectors raise
+        RANK_FAILED."""
+        self._killed.add(rank)
+        self._procs[rank].kill()
+
+    def wait(self, timeout: Optional[float] = None,
+             check: bool = True) -> Dict[str, Any]:
+        """Join all ranks; return rank 0's stats.  Stragglers past the
+        deadline are killed (tests must fail fast, not hang).  With
+        ``check``, any unexpected child failure raises ``RuntimeError``
+        (deliberately ``kill()``-ed ranks are expected to die)."""
+        deadline = time.monotonic() + (
+            timeout if timeout is not None else self.run_timeout + 30.0)
+        hung = []
+        for r, p in self._procs.items():
+            p.join(max(0.0, deadline - time.monotonic()))
+            if p.is_alive():
+                hung.append(r)
+                p.kill()
+                p.join(5.0)
+        results = []
+        while not self._q.empty():
+            results.append(self._q.get())
+        stats = next((x[1] for x in results if x[0] == "ok"), None)
+        if check:
+            if hung:
+                raise RuntimeError(
+                    f"ranks {hung} did not exit within the deadline; "
+                    f"killed.  child reports: {results}")
+            errs = [x for x in results if x[0] == "err"
+                    and x[1] not in self._killed]
+            bad = [r for r, p in self._procs.items()
+                   if p.exitcode not in (0, None) and r not in self._killed]
+            if errs or bad:
+                raise RuntimeError(
+                    f"rank process(es) failed: exitcodes="
+                    f"{ {r: p.exitcode for r, p in self._procs.items()} } "
+                    f"reports={results}")
+        return stats if stats is not None else {}
+
+    def exitcodes(self) -> Dict[int, Optional[int]]:
+        return {r: p.exitcode for r, p in self._procs.items()}
+
+
+def launch_processes(n_ranks: int, main: MainSpec, *,
+                     timeout: float = 120.0, join_timeout: float = None,
+                     check: bool = True,
+                     **kwargs: Any) -> Dict[str, Any]:
+    """Spawn ``n_ranks`` OS processes running ``main`` SPMD over
+    SocketTransport; block until they all exit and return rank 0's stats
+    (including ``run_seconds``, the in-child wall time of ``Runtime.run``).
+    Extra kwargs go to :class:`ProcessGroup` / ``Runtime`` (e.g.
+    ``workers_per_rank``, ``progress``, ``unconsumed``)."""
+    pg = ProcessGroup(n_ranks, main, run_timeout=timeout, **kwargs)
+    pg.start()
+    return pg.wait(join_timeout, check=check)
+
+
+def _cli(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.net.launch",
+        description="Run an EDAT main SPMD across local rank processes "
+                    "over SocketTransport.")
+    ap.add_argument("spec", help="module.path:fn or path/to/file.py:fn "
+                                 "(fn defaults to 'main')")
+    ap.add_argument("-n", "--ranks", type=int, default=2)
+    ap.add_argument("--workers", type=int, default=1,
+                    help="workers per rank (default 1)")
+    ap.add_argument("--progress", choices=("thread", "worker"),
+                    default="thread")
+    ap.add_argument("--timeout", type=float, default=120.0,
+                    help="per-rank Runtime.run timeout (s)")
+    ap.add_argument("--unconsumed", choices=("error", "warn", "ignore"),
+                    default="error")
+    args = ap.parse_args(argv)
+    _resolve_spec(args.spec)  # fail fast in the parent on a bad spec
+    stats = launch_processes(
+        args.ranks, args.spec, timeout=args.timeout,
+        workers_per_rank=args.workers, progress=args.progress,
+        unconsumed=args.unconsumed)
+    print(f"[repro.net.launch] {args.ranks} ranks terminated cleanly: "
+          f"{stats}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(_cli())

@@ -1,0 +1,522 @@
+"""repro.net: socket transport, rendezvous, launcher, failure detection.
+
+Three layers of coverage, cheapest first:
+
+* transport-level unit tests over ``socket.socketpair()`` ends (no
+  processes, no rendezvous);
+* two full Runtimes over a socket pair *in one process* (threads), which
+  exercises the whole distributed CONTROL protocol — status polls,
+  terminate broadcast, abort propagation — without spawn overhead;
+* real ``multiprocessing`` spawn runs through :mod:`repro.net.launch`,
+  including a SIGKILL detected by the heartbeat/EOF failure detector.
+
+Every cross-process test is guarded by the launcher's own join deadline
+(and by pytest-timeout where installed): a hang fails, it never wedges CI.
+"""
+import functools
+import os
+import socket
+import threading
+import time
+
+import pytest
+
+from repro import edat
+from repro.core.transport import CONTROL, EVENT, Message, Transport
+from repro.net import SocketTransport, bootstrap
+from repro.net.launch import ProcessGroup, launch_processes
+
+pytestmark = pytest.mark.timeout(120)
+
+
+def _pair(n_ranks=2, **kw):
+    """Two SocketTransports joined by an AF_UNIX stream pair."""
+    a, b = socket.socketpair()
+    ta = SocketTransport(0, n_ranks, {1: a}, **kw)
+    tb = SocketTransport(1, n_ranks, {0: b}, **kw)
+    return ta, tb
+
+
+def _ev(src, dst, eid, data=None):
+    return Message(EVENT, src, dst, edat.Event(data=data, source=src,
+                                               eid=eid))
+
+
+# ------------------------------------------------------------ unit: framing
+def test_socket_transport_fifo_and_batching():
+    ta, tb = _pair()
+    try:
+        for i in range(20):
+            assert ta.send(_ev(0, 1, "seq", i))
+        ta.send_many([_ev(0, 1, "seq", i) for i in range(20, 40)])
+        got = []
+        deadline = time.monotonic() + 10
+        while len(got) < 40 and time.monotonic() < deadline:
+            got += [m.payload.data for m in tb.recv_many(1, timeout=1.0)]
+        assert got == list(range(40))            # per-(src,dst) FIFO
+        assert ta.sent_vector() == [0, 40]
+        assert tb.recv_vector() == [40, 0]
+        assert tb.pending(1) == 0
+    finally:
+        ta.close()
+        tb.close()
+
+
+def test_socket_transport_loopback_and_drain():
+    ta, tb = _pair()
+    try:
+        ta.send_many([_ev(0, 0, "self", i) for i in range(5)])
+        assert ta.pending(0) == 5
+        msgs = ta.drain(0, max_n=3)
+        assert [m.payload.data for m in msgs] == [0, 1, 2]
+        assert [m.payload.data for m in ta.drain(0)] == [3, 4]
+        assert ta.sent_vector()[0] == 5 and ta.recv_vector()[0] == 5
+    finally:
+        ta.close()
+        tb.close()
+
+
+def test_socket_transport_notify_hook():
+    ta, tb = _pair()
+    hits = threading.Event()
+    try:
+        tb.set_notify(1, hits.set)
+        ta.send(_ev(0, 1, "x"))
+        assert hits.wait(5.0)
+    finally:
+        ta.close()
+        tb.close()
+
+
+def test_socket_transport_control_not_counted():
+    ta, tb = _pair()
+    try:
+        ta.send(Message(CONTROL, 0, 1, ("poke", None)))
+        deadline = time.monotonic() + 5
+        while tb.pending(1) == 0 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        tb.drain(1)
+        assert ta.sent_vector() == [0, 0]        # user events only
+        assert tb.recv_vector() == [0, 0]
+    finally:
+        ta.close()
+        tb.close()
+
+
+def test_validate_payload_typeerror():
+    ta, tb = _pair()
+    try:
+        with pytest.raises(TypeError, match="not.*picklable"):
+            ta.validate_payload(lambda: None)
+        ta.validate_payload({"fine": [1, 2.5, "x"]})
+    finally:
+        ta.close()
+        tb.close()
+
+
+def test_clean_close_is_not_a_failure():
+    ta, tb = _pair()
+    deaths = []
+    tb.on_peer_dead = deaths.append
+    ta.close()
+    time.sleep(0.3)
+    tb.close()
+    assert deaths == []                          # BYE suppressed the verdict
+
+
+def test_abrupt_close_declares_peer_dead():
+    a, b = socket.socketpair()
+    ta = SocketTransport(0, 2, {1: a})
+    tb = SocketTransport(1, 2, {0: b})
+    deaths = []
+    tb.on_peer_dead = deaths.append
+    a.shutdown(socket.SHUT_RDWR)                 # simulated crash: no BYE
+    a.close()
+    deadline = time.monotonic() + 5
+    while not deaths and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert deaths == [0] and tb.is_dead(0)
+    assert not tb.send(_ev(1, 0, "x"))           # drops, counted
+    assert tb.dropped == 1
+    tb.close()
+    ta.close()
+
+
+def test_heartbeat_detects_silent_peer():
+    """Pure heartbeat-timeout path: the connection stays open but rank 0
+    never beats (hb_interval=0 disables its sender)."""
+    a, b = socket.socketpair()
+    ta = SocketTransport(0, 2, {1: a}, hb_interval=0)
+    tb = SocketTransport(1, 2, {0: b}, hb_interval=0.1, hb_timeout=0.6)
+    deaths = []
+    tb.on_peer_dead = deaths.append
+    deadline = time.monotonic() + 10
+    while not deaths and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert deaths == [0] and tb.is_dead(0)
+    tb.close()
+    ta.close()
+
+
+# --------------------------------------------------- rendezvous (threads)
+def test_bootstrap_all_pairs_mesh():
+    n = 3
+    coord = ("127.0.0.1", 0)
+    # pre-pick a coordinator port the threads can share
+    srv = socket.socket()
+    srv.bind(coord)
+    port = srv.getsockname()[1]
+    srv.close()
+    out = {}
+
+    def boot(rank):
+        t = bootstrap(rank, n, ("127.0.0.1", port), timeout=20)
+        out[rank] = t
+
+    ths = [threading.Thread(target=boot, args=(r,)) for r in range(n)]
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join(30)
+    assert sorted(out) == [0, 1, 2]
+    try:
+        # every ordered pair can talk
+        for src in range(n):
+            for dst in range(n):
+                if src != dst:
+                    assert out[src].send(_ev(src, dst, f"e{src}{dst}", src))
+        for dst in range(n):
+            seen = set()
+            deadline = time.monotonic() + 10
+            while len(seen) < n - 1 and time.monotonic() < deadline:
+                for m in out[dst].recv_many(dst, timeout=1.0):
+                    seen.add(m.payload.data)
+            assert seen == set(range(n)) - {dst}
+    finally:
+        for t in out.values():
+            t.close()
+
+
+# ------------------------------- full distributed protocol, in one process
+def _dual_runtime_run(main, *, n=2, progress="thread", timeout=30.0, **kw):
+    """Two Runtimes over a socket pair, one thread each — the complete
+    cross-process CONTROL protocol without spawn overhead."""
+    ta, tb = _pair(n)
+    rts = [edat.Runtime(n, transport=ta, progress=progress, **kw),
+           edat.Runtime(n, transport=tb, progress=progress, **kw)]
+    results = [None, None]
+
+    def go(i):
+        try:
+            results[i] = ("ok", rts[i].run(main, timeout=timeout))
+        except BaseException as e:  # noqa: BLE001
+            results[i] = ("err", e)
+
+    ths = [threading.Thread(target=go, args=(i,)) for i in range(2)]
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join(timeout + 15)
+        assert not t.is_alive(), "distributed run wedged"
+    return results
+
+
+def test_distributed_pingpong_and_stats_broadcast():
+    N = 50
+    got = []
+
+    def ping(ctx, events):
+        if events[0].data < N:
+            ctx.fire(1, "ping", events[0].data + 1)
+
+    def pong(ctx, events):
+        got.append(events[0].data)
+        ctx.fire(0, "pong", events[0].data)
+
+    def main(ctx):
+        if ctx.rank == 0:
+            ctx.submit_persistent(ping, deps=[(1, "pong")])
+            ctx.fire(1, "ping", 1)
+        else:
+            ctx.submit_persistent(pong, deps=[(0, "ping")])
+
+    res = _dual_runtime_run(main, unconsumed="ignore")
+    assert [r[0] for r in res] == ["ok", "ok"]
+    assert got == list(range(1, N + 1))          # FIFO across the wire
+    # rank 1 received rank 0's stats via the terminate broadcast
+    assert res[1][1]["events_sent"] == res[0][1]["events_sent"] > 0
+
+
+def test_distributed_worker_poll_progress():
+    got = []
+
+    def sink(ctx, events):
+        got.append(events[0].data)
+
+    def main(ctx):
+        if ctx.rank == 0:
+            ctx.submit_persistent(sink, deps=[(1, "e")])
+        else:
+            for i in range(20):
+                ctx.fire(0, "e", i)
+
+    res = _dual_runtime_run(main, progress="worker")
+    assert [r[0] for r in res] == ["ok", "ok"]
+    assert got == list(range(20))
+
+
+def test_fire_unpicklable_raises_at_fire_over_socket():
+    """Satellite: a non-picklable payload fails *inside the firing task*
+    with TypeError, and the run still terminates cleanly (the counters
+    were never touched)."""
+    outcome = {}
+
+    def bad_then_good(ctx, events):
+        try:
+            ctx.fire(1, "bad", lambda: None)
+        except TypeError as e:
+            outcome["err"] = str(e)
+            ctx.fire(1, "ok", 7)
+
+    def sink(ctx, events):
+        outcome["got"] = events[0].data
+
+    def main(ctx):
+        if ctx.rank == 0:
+            ctx.submit(bad_then_good)
+        else:
+            ctx.submit(sink, deps=[(0, "ok")])
+
+    res = _dual_runtime_run(main)
+    assert [r[0] for r in res] == ["ok", "ok"]
+    assert "picklable" in outcome["err"]
+    assert outcome["got"] == 7
+
+
+def test_fire_unpicklable_inproc_keeps_copy_semantics():
+    """The in-proc transport still accepts anything copyable (no pickle
+    requirement): same payload, no error."""
+    got = []
+
+    def sink(ctx, events):
+        got.append(events[0].data())
+
+    def main(ctx):
+        if ctx.rank == 0:
+            ctx.fire(1, "fn", lambda: 42, ref=True)
+        else:
+            ctx.submit(sink, deps=[(0, "fn")])
+
+    rt = edat.Runtime(2, workers_per_rank=2)
+    rt.run(main, timeout=30)
+    assert got == [42]
+
+
+def test_task_error_propagates_to_peer_process():
+    def boom(ctx, events):
+        raise ValueError("kaboom")
+
+    def main(ctx):
+        if ctx.rank == 1:
+            ctx.submit(boom)
+
+    res = _dual_runtime_run(main)
+    assert [r[0] for r in res] == ["err", "err"]
+    # rank 1 raised locally; rank 0 got the abort CONTROL message
+    assert "kaboom" in str(res[0][1])
+    assert isinstance(res[0][1], edat.EdatTaskError)
+
+
+def test_timer_pending_on_remote_rank_delays_termination():
+    """fire_after on rank 1 targeting rank 0: the detector (rank 0) must
+    see rank 1's pending timer through the status replies and hold
+    termination until the event lands."""
+    got = []
+
+    def tick(ctx, events):
+        got.append(events[0].data)
+
+    def main(ctx):
+        if ctx.rank == 0:
+            ctx.submit(tick, deps=[(1, "tick")])
+        else:
+            ctx.fire_after(0.4, 0, "tick", 9)
+
+    res = _dual_runtime_run(main)
+    assert [r[0] for r in res] == ["ok", "ok"]
+    assert got == [9]
+
+
+def test_deadlock_detected_across_ranks():
+    def never(ctx, events):  # pragma: no cover
+        pass
+
+    def main(ctx):
+        if ctx.rank == 1:
+            ctx.submit(never, deps=[(0, "never")])
+
+    res = _dual_runtime_run(main, timeout=20)
+    assert [r[0] for r in res] == ["err", "err"]
+    assert isinstance(res[0][1], edat.EdatDeadlockError)
+    assert isinstance(res[1][1], edat.EdatDeadlockError)
+
+
+def test_socket_fire_and_forget_snapshot():
+    """Remote fires skip the deep-copy (the wire pickle is the snapshot):
+    mutating the buffer right after ctx.fire must not be observable."""
+    import numpy as np
+    got = {}
+
+    def sink(ctx, events):
+        got["v"] = list(events[0].data)
+
+    def main(ctx):
+        if ctx.rank == 0:
+            buf = np.array([1, 2, 3])
+            ctx.fire(1, "e", buf)
+            buf[:] = 99
+        else:
+            ctx.submit(sink, deps=[(0, "e")])
+
+    res = _dual_runtime_run(main)
+    assert [r[0] for r in res] == ["ok", "ok"]
+    assert got["v"] == [1, 2, 3]
+
+
+def test_mark_dead_stops_inbound_delivery():
+    """mark_dead must actually sever the connection (shutdown, not a
+    refcounted close): nothing sent by the dead-marked peer may be
+    delivered afterwards."""
+    ta, tb = _pair()
+    try:
+        tb.mark_dead(0)
+        assert tb.is_dead(0)
+        ta.send(_ev(0, 1, "late", 1))
+        time.sleep(0.3)
+        assert tb.pending(1) == 0
+        assert tb.drain(1) == []
+    finally:
+        ta.close()
+        tb.close()
+
+
+# ----------------------------------------------- minimal-Transport fallback
+class MinimalTransport(Transport):
+    """The least a transport can be: send/recv/wake only.  Everything else
+    — send_many, drain, recv_many, notify, failure hooks — comes from the
+    Transport base class defaults."""
+
+    def __init__(self, n_ranks):
+        self._boxes = [[] for _ in range(n_ranks)]
+        self._cv = threading.Condition()
+
+    def send(self, msg):
+        with self._cv:
+            self._boxes[msg.dst].append(msg)
+            self._cv.notify_all()
+        return True
+
+    def recv(self, rank, timeout):
+        with self._cv:
+            if not self._boxes[rank]:
+                self._cv.wait(timeout)
+            if self._boxes[rank]:
+                return self._boxes[rank].pop(0)
+            return None
+
+    def wake(self, rank):
+        with self._cv:
+            self._cv.notify_all()
+
+
+@pytest.mark.parametrize("progress", ["thread", "worker"])
+def test_minimal_transport_end_to_end(progress):
+    """Satellite: an end-to-end run through the base-class batching
+    defaults; in worker mode there is no notify hook, so this also covers
+    the timed-poll progress fallback."""
+    N = 30
+    got = []
+
+    def pong(ctx, events):
+        got.append(events[0].data)
+        ctx.fire(0, "pong", events[0].data)
+
+    def ping(ctx, events):
+        if events[0].data < N:
+            ctx.fire(1, "ping", events[0].data + 1)
+
+    def main(ctx):
+        if ctx.rank == 0:
+            ctx.submit_persistent(ping, deps=[(1, "pong")])
+            ctx.fire(1, "ping", 1)
+        else:
+            ctx.submit_persistent(pong, deps=[(0, "ping")])
+
+    rt = edat.Runtime(2, transport=MinimalTransport(2), progress=progress,
+                      unconsumed="ignore")
+    rt.run(main, timeout=60)
+    assert got == list(range(1, N + 1))
+
+
+# ------------------------------------------------- real spawned processes
+def _ring_main(ctx, n_hops=100):
+    left = (ctx.rank - 1) % ctx.n_ranks
+
+    def relay(c, events):
+        if events[0].data < n_hops:
+            c.fire((c.rank + 1) % c.n_ranks, "token", events[0].data + 1)
+
+    ctx.submit_persistent(relay, deps=[(left, "token")])
+    if ctx.rank == 0:
+        ctx.fire(1, "token", 1)
+
+
+def test_launch_processes_four_rank_ring():
+    stats = launch_processes(
+        4, functools.partial(_ring_main, n_hops=100), timeout=60)
+    assert stats["events_sent"] == stats["events_received"] == 100
+    assert stats["tasks_executed"] == 100
+    assert stats["run_seconds"] > 0
+
+
+def _stuck_main(ctx, ready_path=""):
+    def on_fail(c, events):
+        pass
+
+    ctx.submit(on_fail, deps=[(edat.ANY, edat.RANK_FAILED)])
+    if ctx.rank == 3:
+        open(ready_path, "w").close()
+        time.sleep(300)          # never finishes: must be SIGKILLed
+
+
+def test_process_kill_detected_by_heartbeat(tmp_path):
+    """Acceptance: a kill_rank-equivalent process kill is detected by the
+    failure detector; survivors get RANK_FAILED and terminate cleanly."""
+    ready = str(tmp_path / "ready")
+    pg = ProcessGroup(4, functools.partial(_stuck_main, ready_path=ready),
+                      run_timeout=60, hb_interval=0.2, hb_timeout=1.5)
+    pg.start()
+    deadline = time.monotonic() + 60
+    while not os.path.exists(ready) and time.monotonic() < deadline:
+        time.sleep(0.05)
+    assert os.path.exists(ready), "rank 3 never came up"
+    time.sleep(0.3)
+    pg.kill(3)
+    stats = pg.wait(60)
+    codes = pg.exitcodes()
+    assert codes[3] != 0                      # the victim
+    assert codes[0] == codes[1] == codes[2] == 0
+    assert stats["tasks_executed"] == 3       # one RANK_FAILED per survivor
+
+
+def _boom_main(ctx):
+    def boom(c, events):
+        raise ValueError("spawned-boom")
+
+    if ctx.rank == 1:
+        ctx.submit(boom)
+
+
+def test_spawned_task_error_fails_every_rank():
+    with pytest.raises(RuntimeError, match="spawned-boom"):
+        launch_processes(2, _boom_main, timeout=30)
