@@ -1,22 +1,34 @@
 """Paper Fig 3 analogue: Graph500 BFS TEPS, EDAT vs BSP reference, over
 rank counts.  (Container has one physical core, so absolute TEPS are not
 the paper's Cray numbers; the deliverable is the EDAT-vs-reference
-comparison and the crossover trend as rank count grows.)"""
+comparison and the crossover trend as rank count grows.)
+
+``--transport socket`` runs the *same* event-driven BFS with one OS
+process per rank over ``repro.net``'s coalescing SocketTransport
+(spawned via ``edat.launch_processes``); each row then also records
+``events_per_s`` (user events fired per second of in-child run time,
+summed over all ranks — includes each rank's SELF loopback fires, which
+stay in-process) alongside TEPS, and every parent array is validated
+against the in-proc BSP reference.
+"""
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
 
 import numpy as np
 
-from repro.graph import (EdatBFS, ReferenceBFS, build_csr, kronecker_edges,
-                         validate_bfs_tree)
+from repro.graph import (EdatBFS, ReferenceBFS, build_csr, distributed_bfs,
+                         kronecker_edges, validate_bfs_tree)
 
 
 def run(scale: int = 13, edgefactor: int = 16, ranks=(1, 2, 4, 8),
-        roots: int = 4, validate: bool = True, out: str = None):
-    edges = kronecker_edges(scale, edgefactor)
+        roots: int = 4, validate: bool = True, out: str = None,
+        transport: str = "inproc", seed: int = 20):
+    assert transport in ("inproc", "socket")
+    edges = kronecker_edges(scale, edgefactor, seed)
     n = 1 << scale
     rng = np.random.default_rng(7)
     # sample roots with degree > 0 (graph500 rule)
@@ -26,6 +38,28 @@ def run(scale: int = 13, edgefactor: int = 16, ranks=(1, 2, 4, 8),
 
     rows = []
     for nr in ranks:
+        if transport == "socket":
+            # the spawned children each build their own CSR; the parent
+            # only needs one for reference validation
+            csr = build_csr(edges, n, nr) if validate else None
+            teps_list, evs_list = [], []
+            for root in root_set:
+                parent, info = distributed_bfs(
+                    nr, scale, edgefactor, seed=seed, root=root)
+                teps_list.append(info["teps"])
+                evs_list.append(info["events_per_s"])
+                if validate:
+                    ref = ReferenceBFS(csr).run(root)
+                    assert np.array_equal(parent, ref), \
+                        ("socket", nr, root)
+            rows.append({"impl": "edat-socket", "ranks": nr,
+                         "teps_mean": float(np.mean(teps_list)),
+                         "teps_max": float(np.max(teps_list)),
+                         "events_per_s": float(np.mean(evs_list))})
+            print(f"  bfs scale={scale} ranks={nr:2d} edat-sock "
+                  f"TEPS={np.mean(teps_list):.3e} "
+                  f"ev/s={np.mean(evs_list):.0f}")
+            continue
         csr = build_csr(edges, n, nr)
         for impl_name, mk in (("edat", lambda: EdatBFS(csr)),
                               ("reference", lambda: ReferenceBFS(csr))):
@@ -45,7 +79,8 @@ def run(scale: int = 13, edgefactor: int = 16, ranks=(1, 2, 4, 8),
                          "teps_max": float(np.max(teps_list))})
             print(f"  bfs scale={scale} ranks={nr:2d} {impl_name:9s} "
                   f"TEPS={np.mean(teps_list):.3e}")
-    result = {"scale": scale, "edgefactor": edgefactor, "rows": rows}
+    result = {"scale": scale, "edgefactor": edgefactor,
+              "transport": transport, "rows": rows}
     if out:
         os.makedirs(os.path.dirname(out), exist_ok=True)
         with open(out, "w") as f:
@@ -54,4 +89,22 @@ def run(scale: int = 13, edgefactor: int = 16, ranks=(1, 2, 4, 8),
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("out", nargs="?", default=None,
+                    help="optional path for the bench JSON")
+    ap.add_argument("--transport", choices=("inproc", "socket"),
+                    default="inproc",
+                    help="threads-as-ranks in one process, or one OS "
+                         "process per rank over SocketTransport")
+    ap.add_argument("--scale", type=int, default=13)
+    ap.add_argument("--edgefactor", type=int, default=16)
+    ap.add_argument("--ranks", type=int, nargs="+", default=None,
+                    help="rank counts to sweep (default 1 2 4 8; socket "
+                         "default 2 4)")
+    ap.add_argument("--roots", type=int, default=4)
+    ap.add_argument("--no-validate", action="store_true")
+    a = ap.parse_args()
+    ranks = tuple(a.ranks) if a.ranks else (
+        (2, 4) if a.transport == "socket" else (1, 2, 4, 8))
+    run(scale=a.scale, edgefactor=a.edgefactor, ranks=ranks, roots=a.roots,
+        validate=not a.no_validate, out=a.out, transport=a.transport)

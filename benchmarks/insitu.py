@@ -1,28 +1,48 @@
 """Paper Fig 5 analogue: in-situ analytics bandwidth + latency vs number
-of analytics cores, EDAT pipeline vs bespoke (MONC-style) comms stack."""
+of analytics cores, EDAT pipeline vs bespoke (MONC-style) comms stack.
+
+``--transport socket`` additionally runs the EDAT pipeline with one OS
+process per rank (2n processes) over the coalescing SocketTransport; raw
+field slices cross process boundaries as zero-copy protocol-5 frames and
+the row gains an ``edat_socket`` entry (bandwidth from in-child run
+time).
+"""
 from __future__ import annotations
 
+import argparse
 import json
 import os
 
-from repro.analytics import BespokeAnalytics, EdatAnalytics, InsituCfg
+from repro.analytics import (BespokeAnalytics, EdatAnalytics, InsituCfg,
+                             distributed_insitu)
 
 
 def run(analytics=(1, 2, 4, 8), items: int = 64, elems: int = 1024,
-        out: str = None):
+        out: str = None, transport: str = "inproc"):
+    assert transport in ("inproc", "socket", "both")
     rows = []
     for n in analytics:
         cfg = InsituCfg(n_analytics=n, items_per_producer=items,
                         field_elems=elems, n_fields=2)
-        e = EdatAnalytics(cfg).run()
-        b = BespokeAnalytics(cfg).run()
-        rows.append({"analytics_ranks": n, "edat": e, "bespoke": b})
-        print(f"  insitu n={n:2d} edat bw={e['bandwidth_items_s']:9.1f}/s "
-              f"lat={e['mean_latency_s']*1e3:7.2f}ms | bespoke "
-              f"bw={b['bandwidth_items_s']:9.1f}/s "
-              f"lat={b['mean_latency_s']*1e3:7.2f}ms")
+        row = {"analytics_ranks": n}
+        if transport in ("inproc", "both"):
+            e = EdatAnalytics(cfg).run()
+            b = BespokeAnalytics(cfg).run()
+            row.update(edat=e, bespoke=b)
+            print(f"  insitu n={n:2d} edat bw={e['bandwidth_items_s']:9.1f}/s "
+                  f"lat={e['mean_latency_s']*1e3:7.2f}ms | bespoke "
+                  f"bw={b['bandwidth_items_s']:9.1f}/s "
+                  f"lat={b['mean_latency_s']*1e3:7.2f}ms")
+        if transport in ("socket", "both"):
+            s = distributed_insitu(cfg)
+            row["edat_socket"] = s
+            print(f"  insitu n={n:2d} edat-sock "
+                  f"bw={s['bandwidth_items_s']:9.1f}/s "
+                  f"lat={s['mean_latency_s']*1e3:7.2f}ms "
+                  f"({s['results']} reductions)")
+        rows.append(row)
     result = {"items_per_producer": items, "field_elems": elems,
-              "rows": rows}
+              "transport": transport, "rows": rows}
     if out:
         os.makedirs(os.path.dirname(out), exist_ok=True)
         with open(out, "w") as f:
@@ -31,4 +51,18 @@ def run(analytics=(1, 2, 4, 8), items: int = 64, elems: int = 1024,
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("out", nargs="?", default=None,
+                    help="optional path for the bench JSON")
+    ap.add_argument("--transport", choices=("inproc", "socket", "both"),
+                    default="inproc")
+    ap.add_argument("--analytics", type=int, nargs="+", default=None,
+                    help="analytics-rank counts to sweep (default 1 2 4 8; "
+                         "socket default 1 2 4)")
+    ap.add_argument("--items", type=int, default=64)
+    ap.add_argument("--elems", type=int, default=1024)
+    a = ap.parse_args()
+    analytics = tuple(a.analytics) if a.analytics else (
+        (1, 2, 4) if a.transport != "inproc" else (1, 2, 4, 8))
+    run(analytics=analytics, items=a.items, elems=a.elems, out=a.out,
+        transport=a.transport)

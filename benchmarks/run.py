@@ -31,6 +31,10 @@ def main(argv=None):
     else:
         bfs_scaling.run(scale=12, ranks=(1, 2, 4), roots=2,
                         out=os.path.join(args.outdir, "bfs.json"))
+    print("== Graph500 BFS across OS processes (SocketTransport) ==")
+    bfs_scaling.run(scale=11 if not args.full else 14, ranks=(2, 4),
+                    roots=2, transport="socket",
+                    out=os.path.join(args.outdir, "bfs_socket.json"))
 
     print("== In-situ analytics: EDAT vs bespoke (paper Fig 5) ==")
     from benchmarks import insitu
@@ -40,6 +44,9 @@ def main(argv=None):
     else:
         insitu.run(analytics=(1, 2, 4), items=32,
                    out=os.path.join(args.outdir, "insitu.json"))
+    print("== In-situ analytics across OS processes (SocketTransport) ==")
+    insitu.run(analytics=(1, 2), items=32, transport="socket",
+               out=os.path.join(args.outdir, "insitu_socket.json"))
 
     print("== roofline (from dry-run artifacts, if present) ==")
     from benchmarks import roofline

@@ -1,14 +1,15 @@
 """Graph500 BFS driver (paper §V): event-driven BFS over a Kronecker graph.
 
   PYTHONPATH=src python examples/bfs_graph500.py --scale 14 --ranks 4
+  PYTHONPATH=src python examples/bfs_graph500.py --ranks 4 --transport socket
 """
 import argparse
 import time
 
 import numpy as np
 
-from repro.graph import (EdatBFS, ReferenceBFS, build_csr, kronecker_edges,
-                         validate_bfs_tree)
+from repro.graph import (EdatBFS, ReferenceBFS, build_csr, distributed_bfs,
+                         kronecker_edges, validate_bfs_tree)
 
 
 def main():
@@ -19,6 +20,10 @@ def main():
     ap.add_argument("--workers", type=int, default=1)
     ap.add_argument("--reference", action="store_true",
                     help="run the BSP reference instead of EDAT")
+    ap.add_argument("--transport", choices=("inproc", "socket"),
+                    default="inproc",
+                    help="threads-as-ranks, or one OS process per rank "
+                         "over the coalescing SocketTransport")
     ap.add_argument("--validate", action="store_true")
     args = ap.parse_args()
 
@@ -26,10 +31,25 @@ def main():
     print(f"generating Kronecker graph scale={args.scale} "
           f"({n} vertices, ~{n * args.edgefactor} edges)")
     edges = kronecker_edges(args.scale, args.edgefactor)
-    csr = build_csr(edges, n, args.ranks)
     deg = np.bincount(np.concatenate([edges[0], edges[1]]), minlength=n)
     root = int(np.where(deg > 0)[0][0])
 
+    if args.transport == "socket":
+        assert not args.reference, "--transport socket runs the EDAT BFS"
+        parent, info = distributed_bfs(args.ranks, args.scale,
+                                       args.edgefactor, root=root,
+                                       workers_per_rank=args.workers)
+        print(f"EDAT BFS over {args.ranks} processes: "
+              f"{info['traversed']} edges in {info['run_seconds']:.3f}s "
+              f"-> {info['teps']:.3e} TEPS ({info['events_per_s']:.0f} "
+              f"events/s); reached {(parent >= 0).sum()}/{n}")
+        if args.validate:
+            ok = validate_bfs_tree(edges, parent, root)
+            print(f"validation: {'PASS' if ok else 'FAIL'}")
+            assert ok
+        return
+
+    csr = build_csr(edges, n, args.ranks)
     bfs = (ReferenceBFS(csr) if args.reference
            else EdatBFS(csr, workers_per_rank=args.workers))
     t0 = time.monotonic()

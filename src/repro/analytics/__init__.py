@@ -1,1 +1,2 @@
-from .insitu import InsituCfg, EdatAnalytics, BespokeAnalytics
+from .insitu import (InsituCfg, EdatAnalytics, BespokeAnalytics,
+                     distributed_insitu)

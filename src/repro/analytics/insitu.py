@@ -22,6 +22,7 @@ the design the paper replaced.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import threading
 import time
 from typing import Dict, List, Optional
@@ -47,7 +48,17 @@ def _analyse(x: np.ndarray) -> np.ndarray:
 # ------------------------------------------------------------------- EDAT
 class EdatAnalytics:
     """1:1 computational:analytics ranks (paper's benchmark setup):
-    ranks [0, n) are analytics, ranks [n, 2n) are computational."""
+    ranks [0, n) are analytics, ranks [n, 2n) are computational.
+
+    Attaches to *any* SPMD context via :meth:`start`, so the pipeline runs
+    threads-as-ranks in one process (:meth:`run`) or one rank per OS
+    process over ``repro.net.SocketTransport``
+    (:func:`distributed_insitu`).  Each analytics rank knows upfront how
+    many (field, timestep) reductions it roots; when its writer federator
+    has consumed them all it fires one ``insitu_done`` event, and a
+    transitory gather task on rank 0 folds those into ``self.summary``
+    (result count + mean latency) — the cross-process replacement for
+    reading ``self.results`` from shared memory."""
 
     def __init__(self, cfg: InsituCfg, workers_per_rank: int = 4):
         self.cfg = cfg
@@ -55,14 +66,30 @@ class EdatAnalytics:
         self.results: List[tuple] = []
         self._mu = threading.Lock()
         self.t0 = 0.0
+        n = cfg.n_analytics
+        self._done_count = [0] * n
+        self._lat_sum = [0.0] * n
+        #: aggregated by rank 0's gather task: {"results", "mean_latency_s"}
+        self.summary: Optional[Dict[str, float]] = None
+        #: called (on rank 0's process) with the summary dict
+        self.on_summary = None
+
+    def expected_roots(self, rank: int) -> int:
+        """How many (field, timestep) reductions ``rank`` roots."""
+        cfg = self.cfg
+        per_field = cfg.items_per_producer // cfg.n_fields
+        return sum(1 for fid in range(cfg.n_fields)
+                   for ts in range(per_field)
+                   if (fid + ts) % cfg.n_analytics == rank)
 
     def run(self) -> Dict[str, float]:
+        """In-proc convenience: all 2n ranks as threads in one Runtime."""
         cfg = self.cfg
         n = cfg.n_analytics
         rt = edat.Runtime(2 * n, workers_per_rank=self.workers,
                           unconsumed="error")
         self.t0 = time.monotonic()
-        rt.run(self._main, timeout=600)
+        rt.run(self.start, timeout=600)
         dt = time.monotonic() - self.t0
         raw = cfg.n_analytics * cfg.items_per_producer
         lat = np.mean([r[1] for r in self.results]) if self.results else 0
@@ -70,9 +97,10 @@ class EdatAnalytics:
                 "seconds": dt, "bandwidth_items_s": raw / max(dt, 1e-9),
                 "mean_latency_s": float(lat)}
 
-    def _main(self, ctx: edat.Context):
-        cfg = self.cfg
-        n = cfg.n_analytics
+    def start(self, ctx: edat.Context):
+        """Attach one rank's role (analytics or computational) to any
+        in-proc or distributed runtime."""
+        n = self.cfg.n_analytics
         if ctx.rank < n:
             self._analytics_main(ctx)
         else:
@@ -107,14 +135,29 @@ class EdatAnalytics:
             datas = [e.data for e in events]
             total = np.sum([d["partial"] for d in datas], axis=0)
             t_fire = min(d["t_fire"] for d in datas)
+            lat = time.monotonic() - t_fire
             with self._mu:
-                self.results.append((total, time.monotonic() - t_fire))
+                self.results.append((total, lat))
+                self._done_count[ctx2.rank] += 1
+                self._lat_sum[ctx2.rank] += lat
+                done = self._done_count[ctx2.rank] == expected
+            if done:
+                self._fire_done(ctx2)
 
         def on_deregister(ctx2, events):
             ctx2.remove_task(f"handler.{events[0].data}")
 
         ctx.submit_persistent(on_register, deps=[(edat.ANY, "register")],
                               name="registration")
+        if ctx.rank == 0:
+            ctx.submit(self._gather_task,
+                       deps=[(r, "insitu_done") for r in range(n)],
+                       name="insitu-gather")
+        expected = self.expected_roots(ctx.rank)
+        if expected == 0:
+            # this rank roots nothing (more analytics ranks than (field,
+            # timestep) residues): report an empty completion immediately
+            self._fire_done(ctx)
         # writer federator: one task per (field, timestep) this rank roots.
         # Dependencies name the n analytics ranks explicitly (EDAT_ALL would
         # also include the computational ranks).
@@ -127,6 +170,22 @@ class EdatAnalytics:
                                deps=[(r, f"partial.{fid}.{ts}")
                                      for r in range(n)])
 
+    def _fire_done(self, ctx: edat.Context) -> None:
+        with self._mu:
+            payload = {"rank": ctx.rank,
+                       "results": self._done_count[ctx.rank],
+                       "lat_sum": self._lat_sum[ctx.rank]}
+        ctx.fire(0 if ctx.rank != 0 else edat.SELF, "insitu_done", payload)
+
+    def _gather_task(self, ctx: edat.Context, events):
+        """Rank 0, once: fold every analytics rank's completion report."""
+        total = sum(ev.data["results"] for ev in events)
+        lat_sum = sum(ev.data["lat_sum"] for ev in events)
+        self.summary = {"results": total,
+                        "mean_latency_s": lat_sum / max(total, 1)}
+        if self.on_summary is not None:
+            self.on_summary(self.summary)
+
     # -- computational side -----------------------------------------------------
     def _producer_main(self, ctx: edat.Context):
         cfg = self.cfg
@@ -137,10 +196,57 @@ class EdatAnalytics:
         for i in range(cfg.items_per_producer):
             fid = i % cfg.n_fields
             data = rng.standard_normal(cfg.field_elems)
+            # ref=True: the array is never touched again — the coalescing
+            # socket transport ships the field slice zero-copy
             ctx.fire(target, "field",
                      {"fid": fid, "ts": i // cfg.n_fields, "data": data,
-                      "t_fire": time.monotonic()})
+                      "t_fire": time.monotonic()}, ref=True)
         ctx.fire(target, "dereg", ctx.rank)
+
+
+# ------------------------------------------------- distributed (processes)
+def _spawned_insitu_main(ctx: edat.Context, *, cfg_kw: Dict,
+                         out_path: Optional[str] = None) -> None:
+    """SPMD entry point for ``edat.launch_processes``: 2n processes, one
+    rank each (analytics [0, n), computational [n, 2n)).  Rank 0's process
+    writes the gathered summary as JSON to ``out_path``."""
+    import json
+    cfg = InsituCfg(**cfg_kw)
+    ea = EdatAnalytics(cfg)
+    if ctx.rank == 0 and out_path:
+        def _save(summary: Dict[str, float]) -> None:
+            with open(out_path, "w") as f:
+                json.dump(summary, f)
+        ea.on_summary = _save
+    ea.start(ctx)
+
+
+def distributed_insitu(cfg: InsituCfg, timeout: float = 180.0,
+                       **launch_kwargs) -> Dict[str, float]:
+    """Run the in-situ analytics pipeline with one OS process per rank
+    (2 * ``cfg.n_analytics`` processes) over ``SocketTransport``; returns
+    the same metrics dict as :meth:`EdatAnalytics.run`, with bandwidth
+    computed from the in-child ``run_seconds``."""
+    import dataclasses as _dc
+    import json
+    import os
+    import tempfile
+
+    from repro.net.launch import launch_processes
+    with tempfile.TemporaryDirectory() as td:
+        out = os.path.join(td, "insitu_summary.json")
+        stats = launch_processes(
+            2 * cfg.n_analytics,
+            functools.partial(_spawned_insitu_main,
+                              cfg_kw=_dc.asdict(cfg), out_path=out),
+            timeout=timeout, **launch_kwargs)
+        with open(out) as f:
+            summary = json.load(f)
+    raw = cfg.n_analytics * cfg.items_per_producer
+    dt = max(float(stats.get("run_seconds", 0.0)), 1e-9)
+    return {"raw_items": raw, "results": int(summary["results"]),
+            "seconds": dt, "bandwidth_items_s": raw / dt,
+            "mean_latency_s": float(summary["mean_latency_s"])}
 
 
 # ---------------------------------------------------------------- baseline

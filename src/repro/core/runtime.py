@@ -296,10 +296,13 @@ class Runtime:
         # deep-copy is only needed when a loopback target shares the object
         copy_free = ref or (self.transport.serializes and src not in targets)
         payload = data if copy_free else copy_payload(data)
+        # ref=True hands payload ownership over (EDAT_ADDRESS): a deferred-
+        # write transport may then serialise it lazily and zero-copy
         msgs = [Message(EVENT, src, t,
                         Event(data=payload if (copy_free or len(targets) == 1)
                               else copy_payload(payload),
-                              source=src, eid=eid, persistent=persistent))
+                              source=src, eid=eid, persistent=persistent),
+                        owned=ref)
                 for t in targets]
         sch = self._sched[src]
         # sent is counted before the send so the termination detector can
@@ -330,7 +333,8 @@ class Runtime:
                                           if (copy_free or len(targets) == 1)
                                           else copy_payload(payload),
                                           source=src, eid=eid,
-                                          persistent=persistent)))
+                                          persistent=persistent),
+                                    owned=ref))
         if not msgs:
             return
         sch = self._sched[src]

@@ -27,6 +27,17 @@ implement ``send`` / ``recv`` / ``wake``; the base class supplies working
 (looping) batch defaults and inert failure/notification hooks, and the
 runtime falls back to timed polling in worker-progress mode.
 
+Coalescing: a transport may additionally *defer* the wire write — enqueue
+on ``send`` and drain the queue from a writer thread that packs many
+messages into one syscall (``SocketTransport``'s default, knobs
+``coalesce`` / ``flush_interval`` / ``max_batch_bytes``).  Such a
+transport must still snapshot each non-``owned`` payload synchronously
+inside ``send`` (fire-and-forget semantics); ``Message.owned`` marks
+payloads whose ownership was handed over at fire time, which may be
+encoded lazily and zero-copy.  :meth:`Transport.flush` blocks until
+deferred writes have reached the kernel — a no-op for synchronous
+transports.
+
 Notification: :meth:`Transport.set_notify` registers a per-rank callback
 invoked after messages are enqueued (outside the mailbox lock).  In
 idle-worker progress mode the runtime points it at the scheduler's condition
@@ -56,6 +67,12 @@ class Message:
     src: int
     dst: int
     payload: Any  # Event for kind=EVENT; (tag, data) tuple for CONTROL
+    #: True when the firing task handed payload ownership over (``ref=True``
+    #: fires, the paper's EDAT_ADDRESS): nobody mutates the payload after
+    #: fire, so a serialising transport may encode it lazily and zero-copy
+    #: (pickle protocol-5 out-of-band buffers) instead of snapshotting it
+    #: inside ``send``.
+    owned: bool = False
 
 
 class Transport(abc.ABC):
@@ -116,6 +133,12 @@ class Transport(abc.ABC):
         (no-op by default; callback must not assume any lock is held).
         Transports that do not override this cannot wake idle workers, so
         the runtime falls back to timed polling in worker-progress mode."""
+
+    def flush(self, timeout: Optional[float] = None) -> bool:
+        """Block until deferred (coalesced) sends have been handed to the
+        OS, or ``timeout`` expires.  Transports that write synchronously
+        inside :meth:`send` have nothing to wait for — returns True."""
+        return True
 
     def validate_payload(self, data: Any) -> None:
         """Raise ``TypeError`` if ``data`` cannot travel on this transport.

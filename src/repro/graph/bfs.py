@@ -8,24 +8,46 @@ FIFO guarantee — the level barrier is *implicit in the event matching*,
 no global synchronisation call exists.  Per-rank frontier expansion is
 vectorised numpy (the TPU-native adaptation: batch the per-vertex handler).
 
+The BFS attaches to *any* SPMD context via :meth:`EdatBFS.start`, so the
+same code runs threads-as-ranks in one process (:meth:`EdatBFS.run`, the
+in-proc convenience) or one rank per OS process over
+``repro.net.SocketTransport`` (:func:`distributed_bfs`, which wraps
+``edat.launch_processes``).  On convergence every rank fires its parent
+fragment to rank 0 (``ref=True`` — ownership handover, so the coalescing
+socket transport ships the numpy frontier zero-copy); a transitory gather
+task on rank 0 assembles the full parent array.  Level batches are also
+fired ``ref=True`` for the same reason.
+
 Reference version: classic BSP level-synchronous BFS — compute, exchange,
 explicit global barrier per level (threading.Barrier standing in for
 MPI_Alltoallv + barrier).
 """
 from __future__ import annotations
 
+import functools
+import os
+import tempfile
 import threading
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro import edat
-from .kronecker import PartitionedCSR
+from .kronecker import PartitionedCSR, build_csr, kronecker_edges
 
 
 # --------------------------------------------------------------- EDAT BFS
 class EdatBFS:
+    """Event-driven BFS over a partitioned CSR.
+
+    ``run(root)`` owns an in-proc Runtime (threads-as-ranks); for a
+    distributed run, call ``start(ctx, root)`` from the SPMD main of every
+    participating process — each process hosts ``transport.local_ranks``
+    and the event flow is identical.  The assembled parent array lands in
+    ``self.result`` on the process hosting rank 0 (and is passed to
+    ``on_result`` if set)."""
+
     def __init__(self, csr: PartitionedCSR, workers_per_rank: int = 1,
                  progress: str = "thread"):
         self.csr = csr
@@ -33,27 +55,46 @@ class EdatBFS:
         self.progress = progress
         self.parent: List[Optional[np.ndarray]] = [None] * csr.n_ranks
         self.traversed = [0] * csr.n_ranks
+        self.levels = [0] * csr.n_ranks
+        #: full parent array, assembled by rank 0's gather task
+        self.result: Optional[np.ndarray] = None
+        #: called (on rank 0's process) as on_result(parent, traversed)
+        self.on_result: Optional[Callable[[np.ndarray, List[int]], None]] \
+            = None
+        #: test hook: (rank, level, seconds, ready_path) — that rank's
+        #: visit task touches ready_path then sleeps at that level,
+        #: holding the traversal mid-flight (SIGKILL injection point)
+        self.stall: Optional[Tuple[int, int, float, Optional[str]]] = None
 
-    def run(self, root: int) -> np.ndarray:
-        csr = self.csr
-        n_ranks = csr.n_ranks
-        rt = edat.Runtime(n_ranks, workers_per_rank=self.workers,
+    def run(self, root: int, timeout: float = 600.0) -> np.ndarray:
+        """In-proc convenience: all ranks as threads in one Runtime."""
+        rt = edat.Runtime(self.csr.n_ranks, workers_per_rank=self.workers,
                           progress=self.progress, unconsumed="error")
         self._rt = rt
-        rt.run(lambda ctx: self._main(ctx, root), timeout=600)
-        out = np.full(csr.n_vertices, -1, np.int64)
-        for r in range(n_ranks):
-            lo, hi = csr.local_range(r)
-            out[lo:hi] = self.parent[r]
-        return out
+        rt.run(lambda ctx: self.start(ctx, root), timeout=timeout)
+        return self.result
 
-    def _main(self, ctx: edat.Context, root: int):
+    def start(self, ctx: edat.Context, root: int) -> None:
+        """Attach the BFS to one rank of any (in-proc or distributed)
+        runtime: submit the visit/gather/fail-stop tasks and fire the
+        level-0 seed batches."""
         csr = self.csr
         lo, hi = csr.local_range(ctx.rank)
         self.parent[ctx.rank] = np.full(hi - lo, -1, np.int64)
 
         ctx.submit_persistent(self._visit_task,
                               deps=[(edat.ALL, "visit")], name="visit")
+        # fail-stop: without this, survivors of a mid-traversal rank loss
+        # would idle forever inside the ALL-dependency (the dead rank's
+        # level batch never arrives); raising turns RANK_FAILED into a
+        # clean abort that the runtime propagates to every process
+        ctx.submit_persistent(self._failstop,
+                              deps=[(edat.ANY, edat.RANK_FAILED)],
+                              name="bfs-failstop")
+        if ctx.rank == 0:
+            ctx.submit(self._gather_task,
+                       deps=[(r, "bfs_parents")
+                             for r in range(ctx.n_ranks)], name="gather")
         # level 0: everyone fires its (mostly empty) seed batch
         if csr.owner(np.int64(root)) == ctx.rank:
             seed = np.array([[root, root]], np.int64)
@@ -62,17 +103,48 @@ class EdatBFS:
         for r in range(ctx.n_ranks):
             ctx.fire(r if r != ctx.rank else edat.SELF, "visit",
                      {"edges": seed if r == csr.owner(np.int64(root))
-                      else np.empty((0, 2), np.int64), "active": 1})
+                      else np.empty((0, 2), np.int64), "active": 1},
+                     ref=True)
+
+    def _failstop(self, ctx: edat.Context, events):
+        raise RuntimeError(
+            f"BFS aborted on rank {ctx.rank}: rank {events[0].data} "
+            f"failed mid-traversal")
+
+    def _gather_task(self, ctx: edat.Context, events):
+        """Rank 0, once: assemble the global parent array from every
+        rank's converged fragment."""
+        out = np.full(self.csr.n_vertices, -1, np.int64)
+        for ev in events:
+            d = ev.data
+            lo, hi = self.csr.local_range(d["rank"])
+            out[lo:hi] = d["parent"]
+            self.traversed[d["rank"]] = int(d["traversed"])
+        self.result = out
+        if self.on_result is not None:
+            self.on_result(out, list(self.traversed))
 
     def _visit_task(self, ctx: edat.Context, events):
         """One execution per level: consume all ranks' batches, expand."""
         csr = self.csr
         lo, hi = csr.local_range(ctx.rank)
         parent = self.parent[ctx.rank]
+        level = self.levels[ctx.rank]
+        self.levels[ctx.rank] = level + 1
+        if self.stall is not None and self.stall[0] == ctx.rank \
+                and self.stall[1] == level:
+            if self.stall[3]:
+                open(self.stall[3], "w").close()
+            time.sleep(self.stall[2])
 
         total_active = sum(ev.data["active"] for ev in events)
         if total_active == 0:
-            return  # converged: nobody fired real work; stop the cascade
+            # converged: nobody fired real work; stop the cascade and ship
+            # this rank's fragment to the gatherer
+            ctx.fire(0 if ctx.rank != 0 else edat.SELF, "bfs_parents",
+                     {"rank": ctx.rank, "parent": parent,
+                      "traversed": self.traversed[ctx.rank]}, ref=True)
+            return
 
         batches = [ev.data["edges"] for ev in events
                    if len(ev.data["edges"])]
@@ -109,11 +181,70 @@ class EdatBFS:
             cuts = np.zeros(ctx.n_ranks + 1, np.int64)
 
         active = 1 if len(frontier) else 0
-        for r in range(ctx.n_ranks):
-            sl = slice(cuts[r], cuts[r + 1])
-            batch = np.stack([nbrs[sl], pars[sl]], axis=1)
-            ctx.fire(r if r != ctx.rank else edat.SELF, "visit",
-                     {"edges": batch, "active": active})
+        ctx.fire_batch(
+            [(r if r != ctx.rank else edat.SELF, "visit",
+              {"edges": np.stack([nbrs[cuts[r]:cuts[r + 1]],
+                                  pars[cuts[r]:cuts[r + 1]]], axis=1),
+               "active": active})
+             for r in range(ctx.n_ranks)], ref=True)
+
+
+# ------------------------------------------------- distributed (processes)
+def _spawned_bfs_main(ctx: edat.Context, *, scale: int, edgefactor: int,
+                      seed: int, root: int, out_path: Optional[str] = None,
+                      stall=None, ready_path: Optional[str] = None) -> None:
+    """SPMD entry point for ``edat.launch_processes``: every process
+    regenerates the same Kronecker graph deterministically (no broadcast
+    needed), partitions it over ``ctx.n_ranks``, and attaches the BFS.
+    Rank 0's process saves the gathered result to ``out_path`` (.npz with
+    ``parent`` and per-rank ``traversed``)."""
+    edges = kronecker_edges(scale, edgefactor, seed)
+    csr = build_csr(edges, 1 << scale, ctx.n_ranks)
+    bfs = EdatBFS(csr)
+    if stall is not None:
+        bfs.stall = (stall[0], stall[1], stall[2], ready_path)
+    if ctx.rank == 0 and out_path:
+        def _save(parent: np.ndarray, traversed: List[int]) -> None:
+            np.savez(out_path, parent=parent,
+                     traversed=np.asarray(traversed, np.int64))
+        bfs.on_result = _save
+    bfs.start(ctx, root)
+
+
+def distributed_bfs(n_ranks: int, scale: int, edgefactor: int = 16,
+                    seed: int = 20, root: Optional[int] = None,
+                    timeout: float = 120.0, **launch_kwargs):
+    """Run the event-driven BFS with one OS process per rank over
+    ``SocketTransport`` and return ``(parent, info)``: the assembled
+    parent array plus run stats (``run_seconds``, ``teps``,
+    ``events_per_s`` — all-rank user events/s incl. SELF loopback fires —
+    ``traversed``, ``root``).  Extra kwargs reach
+    :func:`repro.net.launch.launch_processes` (e.g. ``hb_interval``,
+    ``flush_interval``, ``workers_per_rank``)."""
+    from repro.net.launch import launch_processes
+    if root is None:
+        # only the default-root derivation needs the graph in the parent
+        # (the spawned children regenerate it themselves)
+        edges = kronecker_edges(scale, edgefactor, seed)
+        n = 1 << scale
+        deg = np.bincount(np.concatenate([edges[0], edges[1]]), minlength=n)
+        root = int(np.where(deg > 0)[0][0])
+    with tempfile.TemporaryDirectory() as td:
+        out = os.path.join(td, "bfs_result.npz")
+        stats = launch_processes(
+            n_ranks,
+            functools.partial(_spawned_bfs_main, scale=scale,
+                              edgefactor=edgefactor, seed=seed, root=root,
+                              out_path=out),
+            timeout=timeout, **launch_kwargs)
+        dat = np.load(out)
+        parent = dat["parent"]
+        traversed = int(dat["traversed"].sum())
+    info = dict(stats)
+    dt = max(float(stats.get("run_seconds", 0.0)), 1e-9)
+    info.update(root=root, traversed=traversed, teps=traversed / dt,
+                events_per_s=stats.get("events_sent", 0) / dt)
+    return parent, info
 
 
 # ---------------------------------------------------------- BSP reference

@@ -64,12 +64,14 @@ def _configure(sock: socket.socket) -> socket.socket:
 
 def bootstrap(rank: int, n_ranks: int, coord_addr: Addr, *,
               host: str = "127.0.0.1", timeout: float = 30.0,
-              hb_interval: float = 0.5,
-              hb_timeout: float = 5.0) -> SocketTransport:
-    """Run the rendezvous for ``rank`` and return a connected transport."""
+              hb_interval: float = 0.5, hb_timeout: float = 5.0,
+              **transport_kw) -> SocketTransport:
+    """Run the rendezvous for ``rank`` and return a connected transport.
+    Extra keyword arguments (``coalesce``, ``flush_interval``,
+    ``max_batch_bytes``) pass through to :class:`SocketTransport`."""
     if n_ranks == 1:
         return SocketTransport(0, 1, {}, hb_interval=hb_interval,
-                               hb_timeout=hb_timeout)
+                               hb_timeout=hb_timeout, **transport_kw)
     deadline = time.monotonic() + timeout
     listener = _listener(host)
     my_addr: Addr = (host, listener.getsockname()[1])
@@ -122,7 +124,7 @@ def bootstrap(rank: int, n_ranks: int, coord_addr: Addr, *,
     finally:
         listener.close()
     return SocketTransport(rank, n_ranks, peers, hb_interval=hb_interval,
-                           hb_timeout=hb_timeout)
+                           hb_timeout=hb_timeout, **transport_kw)
 
 
 def bootstrap_from_env(**kw) -> SocketTransport:

@@ -74,7 +74,7 @@ def _resolve_spec(spec: str) -> Callable:
 
 def _child_entry(rank: int, n_ranks: int, coord_addr, main: MainSpec,
                  runtime_kwargs: Dict[str, Any], run_timeout: float,
-                 hb: Dict[str, float], result_q) -> None:
+                 net: Dict[str, Any], result_q) -> None:
     os.environ["EDAT_RANK"] = str(rank)
     os.environ["EDAT_NRANKS"] = str(n_ranks)
     os.environ["EDAT_COORD"] = f"{coord_addr[0]}:{coord_addr[1]}"
@@ -83,7 +83,7 @@ def _child_entry(rank: int, n_ranks: int, coord_addr, main: MainSpec,
         from .bootstrap import bootstrap
         if isinstance(main, str):
             main = _resolve_spec(main)
-        transport = bootstrap(rank, n_ranks, coord_addr, **hb)
+        transport = bootstrap(rank, n_ranks, coord_addr, **net)
         rt = Runtime(n_ranks, transport=transport, **runtime_kwargs)
         t0 = time.monotonic()
         stats = rt.run(main, timeout=run_timeout)
@@ -102,16 +102,23 @@ def _child_entry(rank: int, n_ranks: int, coord_addr, main: MainSpec,
 class ProcessGroup:
     """A set of spawned rank processes sharing one SocketTransport world."""
 
+    #: ProcessGroup kwargs forwarded to the SocketTransport (via bootstrap)
+    #: rather than to the Runtime
+    NET_KEYS = ("hb_interval", "hb_timeout", "coalesce", "flush_interval",
+                "max_batch_bytes")
+
     def __init__(self, n_ranks: int, main: MainSpec, *,
                  run_timeout: float = 120.0,
-                 hb_interval: float = 0.5, hb_timeout: float = 5.0,
                  host: str = "127.0.0.1",
-                 **runtime_kwargs: Any):
+                 **kwargs: Any):
         self.n_ranks = n_ranks
         self.main = main
         self.run_timeout = run_timeout
-        self.runtime_kwargs = runtime_kwargs
-        self._hb = {"hb_interval": hb_interval, "hb_timeout": hb_timeout}
+        self._net = {k: kwargs.pop(k) for k in list(kwargs)
+                     if k in self.NET_KEYS}
+        self._net.setdefault("hb_interval", 0.5)
+        self._net.setdefault("hb_timeout", 5.0)
+        self.runtime_kwargs = kwargs
         self._host = host
         self._procs: Dict[int, mp.process.BaseProcess] = {}
         self._killed = set()
@@ -125,7 +132,7 @@ class ProcessGroup:
             p = ctx.Process(
                 target=_child_entry,
                 args=(r, self.n_ranks, coord, self.main,
-                      self.runtime_kwargs, self.run_timeout, self._hb,
+                      self.runtime_kwargs, self.run_timeout, self._net,
                       self._q),
                 daemon=False, name=f"edat-rank{r}")
             p.start()
@@ -185,8 +192,11 @@ def launch_processes(n_ranks: int, main: MainSpec, *,
     """Spawn ``n_ranks`` OS processes running ``main`` SPMD over
     SocketTransport; block until they all exit and return rank 0's stats
     (including ``run_seconds``, the in-child wall time of ``Runtime.run``).
-    Extra kwargs go to :class:`ProcessGroup` / ``Runtime`` (e.g.
-    ``workers_per_rank``, ``progress``, ``unconsumed``)."""
+    Extra kwargs go to :class:`ProcessGroup`: transport knobs
+    (``hb_interval``, ``hb_timeout``, ``coalesce``, ``flush_interval``,
+    ``max_batch_bytes``) reach the :class:`~repro.net.SocketTransport`;
+    everything else reaches the ``Runtime`` (e.g. ``workers_per_rank``,
+    ``progress``, ``unconsumed``)."""
     pg = ProcessGroup(n_ranks, main, run_timeout=timeout, **kwargs)
     pg.start()
     return pg.wait(join_timeout, check=check)
@@ -208,12 +218,22 @@ def _cli(argv=None) -> int:
                     help="per-rank Runtime.run timeout (s)")
     ap.add_argument("--unconsumed", choices=("error", "warn", "ignore"),
                     default="error")
+    ap.add_argument("--no-coalesce", action="store_true",
+                    help="disable writer-side event coalescing (one frame "
+                         "per send; the slow path, for A/B comparisons)")
+    ap.add_argument("--flush-interval", type=float, default=0.0,
+                    help="writer batching window in seconds (default 0: "
+                         "purely opportunistic coalescing)")
+    ap.add_argument("--max-batch-bytes", type=int, default=1 << 20,
+                    help="approximate cap on one coalesced frame (bytes)")
     args = ap.parse_args(argv)
     _resolve_spec(args.spec)  # fail fast in the parent on a bad spec
     stats = launch_processes(
         args.ranks, args.spec, timeout=args.timeout,
         workers_per_rank=args.workers, progress=args.progress,
-        unconsumed=args.unconsumed)
+        unconsumed=args.unconsumed, coalesce=not args.no_coalesce,
+        flush_interval=args.flush_interval,
+        max_batch_bytes=args.max_batch_bytes)
     print(f"[repro.net.launch] {args.ranks} ranks terminated cleanly: "
           f"{stats}")
     return 0

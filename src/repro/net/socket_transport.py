@@ -3,13 +3,30 @@
 Implements the full :class:`~repro.core.transport.Transport` contract over
 stream sockets with length-prefixed pickled frames (:mod:`repro.net.frames`):
 
-* **FIFO** — one connection per unordered rank pair, written under a
-  per-connection lock and read by one reader thread per peer, so
-  per-(src,dst) delivery order is exactly TCP byte order.  Self-sends take
-  a lock-free-ish loopback straight into the local inbox.
-* **Batching** — ``send_many`` concatenates a whole fire-batch into one
-  ``sendall`` per destination; ``drain``/``recv_many`` pop the entire inbox
-  in one lock round-trip.
+* **FIFO** — one connection per unordered rank pair, written by exactly one
+  writer (the per-peer writer thread when coalescing, a per-connection lock
+  otherwise) and read by one reader thread per peer, so per-(src,dst)
+  delivery order is exactly TCP byte order.  Self-sends take a
+  lock-free-ish loopback straight into the local inbox.
+* **Coalescing** — the default fast path: ``send``/``send_many`` only
+  *enqueue* onto a per-peer send queue; a per-peer writer thread drains the
+  queue and packs many events into **one batch frame per syscall**
+  (:func:`frames.encode_batch`, vectored ``sendmsg``).  While the writer is
+  inside a syscall new sends pile up behind it, so batch size adapts to
+  load with no added latency.  Knobs: ``flush_interval`` (wait this long
+  after the first queued message for a batch to accumulate; default 0 —
+  purely opportunistic batching) and ``max_batch_bytes`` (approximate cap
+  on one encoded batch; larger queues split into multiple frames).
+  ``coalesce=False`` restores the synchronous one-frame-per-send path.
+* **Snapshots vs zero-copy** — fire-and-forget requires the payload to be
+  snapshotted at fire time.  Ordinary messages are therefore batch-encoded
+  *in-band, synchronously inside send* (the pickle is the snapshot; the
+  writer thread only does syscalls).  Messages whose payload ownership was
+  handed over (``Message.owned``, set by the runtime for ``ref=True``
+  fires — the paper's ``EDAT_ADDRESS``) skip the fire-time pickle
+  entirely: the writer thread encodes them with pickle protocol-5
+  out-of-band buffers, so numpy payloads (BFS frontiers, MONC field
+  slices) go from the firing task's buffer to the socket **zero-copy**.
 * **Notification** — ``set_notify`` wakes an idle worker on arrival
   (worker-progress mode), exactly like the in-proc transport.
 * **Failure detection** — every connection carries heartbeats; a peer that
@@ -18,9 +35,10 @@ stream sockets with length-prefixed pickled frames (:mod:`repro.net.frames`):
   the runtime wires to its ``RANK_FAILED`` machinery.  Sends to dead peers
   are dropped and counted, mirroring ``InProcTransport``.
 * **Termination accounting** — per-peer ``sent_to``/``recv_from`` vectors
-  (user events only; received counts when a message is *popped* for
-  delivery, so an un-drained inbox still reads as in-flight).  The Mattern
-  detector balances these across processes, restricted to alive ranks.
+  (user events only; sent counts at *enqueue*, before the wire write, and
+  received counts when a message is *popped* for delivery, so queued and
+  in-flight events always read as in-flight).  The Mattern detector
+  balances these across processes, restricted to alive ranks.
 
 Payloads must be picklable; :meth:`validate_payload` enforces this at
 ``ctx.fire()`` time so the error surfaces in the firing task.
@@ -38,9 +56,23 @@ import time
 from collections import deque
 from typing import Callable, Dict, List, Optional
 
+import numpy as np
+
 from repro.core.transport import EVENT, Message, Transport
 
 from . import frames
+
+#: quickly-validatable payload leaf types (exact types, not subclasses:
+#: a subclass can carry arbitrary unpicklable state — see validate_payload)
+_PLAIN = frozenset((type(None), bool, int, float, complex, str, bytes,
+                    bytearray))
+
+#: deeply-immutable payload types: a fire-time snapshot is pointless (the
+#: firing task cannot mutate them), so they take the deferred-encode path
+#: even without ``Message.owned`` — the writer thread packs whole runs of
+#: them into one batch frame / one pickle.  Exact types only: an int
+#: *subclass* may hold mutable (or unpicklable) attribute state.
+_IMMUTABLE = frozenset((type(None), bool, int, float, complex, str, bytes))
 
 
 class SocketTransport(Transport):
@@ -51,7 +83,9 @@ class SocketTransport(Transport):
 
     def __init__(self, rank: int, n_ranks: int,
                  peers: Dict[int, socket.socket], *,
-                 hb_interval: float = 0.5, hb_timeout: float = 5.0):
+                 hb_interval: float = 0.5, hb_timeout: float = 5.0,
+                 coalesce: bool = True, flush_interval: float = 0.0,
+                 max_batch_bytes: int = 1 << 20):
         assert set(peers) == set(range(n_ranks)) - {rank}, \
             f"rank {rank}/{n_ranks}: need a socket per peer, got {set(peers)}"
         self.rank = rank
@@ -75,10 +109,19 @@ class SocketTransport(Transport):
         self._dead = [False] * n_ranks
         self._bye = set()          # peers that closed cleanly
         self._dropped = 0
-        self._sent_to = [0] * n_ranks     # user events written per dst
+        self._sent_to = [0] * n_ranks     # user events enqueued per dst
         self._recv_from = [0] * n_ranks   # user events popped per src
         self._last_seen = {p: time.monotonic() for p in peers}
         self._closing = False
+        self._close_started = False
+
+        # writer-side coalescing state (one queue + writer thread per peer)
+        self.coalesce = bool(coalesce)
+        self.flush_interval = flush_interval
+        self.max_batch_bytes = int(max_batch_bytes)
+        self._sendq: Dict[int, deque] = {p: deque() for p in peers}
+        self._sendcv = {p: threading.Condition() for p in peers}
+        self._wbusy = {p: False for p in peers}  # writer mid-write
 
         self._hb_interval = hb_interval
         self._hb_timeout = hb_timeout
@@ -88,6 +131,13 @@ class SocketTransport(Transport):
                                  name=f"edat-net-r{rank}<{p}")
             self._threads.append(t)
             t.start()
+        if self.coalesce:
+            for p in peers:
+                t = threading.Thread(target=self._writer, args=(p,),
+                                     daemon=True,
+                                     name=f"edat-net-w{rank}>{p}")
+                self._threads.append(t)
+                t.start()
         self._hb_stop = threading.Event()
         if hb_interval > 0:
             t = threading.Thread(target=self._heartbeat_loop, daemon=True,
@@ -97,37 +147,42 @@ class SocketTransport(Transport):
 
     # ---------------------------------------------------------- reader side
     def _reader(self, peer: int) -> None:
+        """Per-peer reader: one blocking ``recv`` per burst, then decode
+        *every* complete frame already buffered and hand the whole run of
+        messages to the scheduler in one delivery — the receive-side
+        mirror of the writer's coalescing."""
         sock = self._peers[peer]
-        try:
-            f = sock.makefile("rb")
-        except OSError:
-            f = None
+        buf = bytearray()
         while True:
             try:
-                frame = (frames.recv_frame_buffered(f) if f is not None
-                         else None)
-            except Exception:
-                frame = None  # broken/corrupt connection == EOF
-            if frame is None:
+                data = sock.recv(1 << 16)
+            except OSError:
+                data = b""
+            eof = not data
+            if data:
+                buf += data
                 with self._mu:
-                    clean = self._closing
-                if not clean:
-                    self._declare_dead(peer)  # silent if the peer said BYE
-                if f is not None:
-                    try:
-                        f.close()
-                    except OSError:
-                        pass
-                return
-            with self._mu:
-                self._last_seen[peer] = time.monotonic()
-            kind = frame[0]
-            if kind == frames.MSG:
-                msg = frame[1]
+                    self._last_seen[peer] = time.monotonic()
+            decoded, used, corrupt = frames.decode_buffer(buf)
+            if used:
+                del buf[:used]
+            msgs: List[Message] = []
+            for frame in decoded:
+                kind = frame[0]
+                if kind == frames.MSGS:
+                    msgs.extend(frame[1])
+                elif kind == frames.MSG:
+                    msgs.append(frame[1])
+                elif kind == frames.BYE:
+                    with self._mu:
+                        self._bye.add(peer)
+                    # keep reading until EOF so late frames cannot be lost
+                # HEARTBEAT: nothing beyond the last_seen update above
+            if msgs:
                 with self._cv:
                     push = self._deliver
                     if push is None:
-                        self._inbox.append(msg)
+                        self._inbox.extend(msgs)
                         self._cv.notify()
                 if push is not None:
                     # deliver BEFORE counting: recv_from must never include
@@ -135,17 +190,18 @@ class SocketTransport(Transport):
                     # could observe balanced counters + idle schedulers while
                     # the event sits on a descheduled reader (rcv < sent in
                     # the gap is the safe direction — it only delays a poll)
-                    push([msg])
-                    self._count_popped((msg,))
-                    continue
-                hook = self._notify
-                if hook is not None:
-                    hook()  # outside the inbox lock (may take sched locks)
-            elif kind == frames.BYE:
+                    push(msgs)
+                    self._count_popped(msgs)
+                else:
+                    hook = self._notify
+                    if hook is not None:
+                        hook()  # outside the inbox lock (may take sched locks)
+            if eof or corrupt:
                 with self._mu:
-                    self._bye.add(peer)
-                # keep reading until EOF so late frames cannot be lost
-            # HEARTBEAT: nothing beyond the last_seen update above
+                    clean = self._closing
+                if not clean:
+                    self._declare_dead(peer)  # silent if the peer said BYE
+                return
 
     def _heartbeat_loop(self) -> None:
         beat = frames.encode((frames.HEARTBEAT,))
@@ -158,6 +214,9 @@ class SocketTransport(Transport):
                     stale = now - self._last_seen[p] > self._hb_timeout
                 if stale:
                     self._declare_dead(p)
+                    continue
+                if self.coalesce:
+                    self._enqueue(p, [("enc", [beat], 0)])
                     continue
                 try:
                     with self._send_mu[p]:
@@ -188,13 +247,197 @@ class SocketTransport(Transport):
             self._dead[peer] = True
             was_clean = peer in self._bye
         self._teardown(self._peers[peer])
+        self._drop_queue(peer)  # queued-but-unwritten sends die with the peer
         self.wake(self.rank)  # a blocked recv should re-check the world
         cb = self.on_peer_dead
         if cb is not None and not was_clean:
             cb(peer)
 
+    # ----------------------------------------------------- coalescing writer
+    def _enqueue(self, dst: int, items: List) -> None:
+        """Append items to ``dst``'s send queue in one lock round-trip.
+        Items are either a :class:`Message` (owned payload; the writer
+        encodes it late with out-of-band buffers) or ``("enc", pieces,
+        n_events)`` (a pre-encoded snapshot frame)."""
+        cv = self._sendcv[dst]
+        with cv:
+            self._sendq[dst].extend(items)
+            cv.notify_all()
+
+    def _count_items_dropped(self, items) -> None:
+        """Account queue items that will never reach the wire."""
+        n = 0
+        for it in items:
+            if isinstance(it, Message):
+                n += 1 if it.kind == EVENT else 0
+            else:
+                n += it[2]
+        if n:
+            with self._mu:
+                self._dropped += n
+
+    def _drop_queue(self, peer: int) -> None:
+        """Discard ``peer``'s queued sends, counting user events dropped."""
+        cv = self._sendcv.get(peer)
+        if cv is None:
+            return
+        with cv:
+            items = list(self._sendq[peer])
+            self._sendq[peer].clear()
+            cv.notify_all()
+        self._count_items_dropped(items)
+
+    @staticmethod
+    def _rough_nbytes(msg: Message) -> int:
+        """Cheap size estimate used to split oversized write batches."""
+        data = getattr(msg.payload, "data", msg.payload)
+        n = 512
+        if isinstance(data, np.ndarray):
+            n += data.nbytes
+        elif isinstance(data, dict):
+            for v in data.values():
+                n += v.nbytes if isinstance(v, np.ndarray) else 64
+        elif isinstance(data, (list, tuple)):
+            for v in data:
+                n += v.nbytes if isinstance(v, np.ndarray) else 64
+        return n
+
+    def _writer(self, peer: int) -> None:
+        """Per-peer writer thread: drain the send queue, pack runs of owned
+        messages into batch frames (protocol-5 out-of-band buffers), and
+        push everything to the kernel with one vectored send."""
+        sock = self._peers[peer]
+        q = self._sendq[peer]
+        cv = self._sendcv[peer]
+        while True:
+            with cv:
+                while not q:
+                    if self._dead[peer] or self._closing:
+                        return
+                    cv.wait()
+                if self.flush_interval > 0:
+                    # let a batch accumulate behind the first message; loop
+                    # on a deadline — every enqueue notifies the condvar,
+                    # so a single timed wait would return after one message
+                    end = time.monotonic() + self.flush_interval
+                    while not self._dead[peer] and not self._closing:
+                        left = end - time.monotonic()
+                        if left <= 0:
+                            break
+                        cv.wait(left)
+                items = list(q)
+                q.clear()
+                self._wbusy[peer] = True
+            try:
+                if self._dead[peer]:
+                    # popped concurrently with the death verdict:
+                    # _drop_queue saw an empty queue, so count these here
+                    self._count_items_dropped(items)
+                    return
+                try:
+                    self._write_items(sock, items)
+                except OSError:
+                    with self._mu:
+                        closing = self._closing
+                    if not closing:
+                        self._declare_dead(peer)
+                    # like the synchronous path, the whole failed write
+                    # counts as dropped (some bytes may have made it out,
+                    # but the peer is gone either way)
+                    self._count_items_dropped(items)
+                    return
+            finally:
+                with cv:
+                    self._wbusy[peer] = False
+                    cv.notify_all()
+
+    def _write_items(self, sock: socket.socket, items: List) -> None:
+        pieces: List = []
+        run: List[Message] = []
+        run_bytes = 0
+
+        def flush_run():
+            nonlocal run_bytes
+            if not run:
+                return
+            try:
+                pieces.extend(frames.encode_batch(run, oob=True))
+            except Exception:
+                # an unpicklable slipped past validate_payload: salvage the
+                # rest of the run, drop (and count) the poison messages
+                for m in run:
+                    try:
+                        pieces.extend(frames.encode_batch([m], oob=False))
+                    except Exception:
+                        if m.kind == EVENT:
+                            with self._mu:
+                                self._dropped += 1
+            run.clear()
+            run_bytes = 0
+
+        for it in items:
+            if isinstance(it, Message):
+                run.append(it)
+                run_bytes += self._rough_nbytes(it)
+                if run_bytes >= self.max_batch_bytes:
+                    flush_run()
+            else:
+                flush_run()
+                pieces.extend(it[1])
+        flush_run()
+        self._sendall_vec(sock, pieces)
+
+    @staticmethod
+    def _sendall_vec(sock: socket.socket, pieces: List) -> None:
+        """Write every piece, scatter/gather where the OS supports it."""
+        views = []
+        for p in pieces:
+            mv = p if isinstance(p, memoryview) else memoryview(p)
+            if mv.ndim != 1 or mv.format != "B":
+                mv = mv.cast("B")
+            if len(mv):
+                views.append(mv)
+        if not views:
+            return
+        if not hasattr(sock, "sendmsg"):  # pragma: no cover - posix only
+            sock.sendall(b"".join(views))
+            return
+        i = 0
+        while i < len(views):
+            sent = sock.sendmsg(views[i:i + 64])
+            while sent > 0:
+                v = views[i]
+                if sent >= len(v):
+                    sent -= len(v)
+                    i += 1
+                else:
+                    views[i] = v[sent:]
+                    sent = 0
+
+    def flush(self, timeout: Optional[float] = 5.0) -> bool:
+        """Block until every peer's send queue has drained to the kernel
+        (or ``timeout`` expires).  Returns True when fully flushed.  Only
+        meaningful with coalescing; a no-op (True) otherwise."""
+        if not self.coalesce:
+            return True
+        deadline = time.monotonic() + (timeout if timeout is not None
+                                       else 1e9)
+        ok = True
+        for p, cv in self._sendcv.items():
+            with cv:
+                while ((self._sendq[p] or self._wbusy[p])
+                       and not self._dead[p]):
+                    left = deadline - time.monotonic()
+                    if left <= 0:
+                        ok = False
+                        break
+                    cv.wait(min(left, 0.05))
+        return ok
+
     # ---------------------------------------------------------- send side
     def validate_payload(self, data) -> None:
+        if self._quick_picklable(data):
+            return
         try:
             pickle.dumps(data, protocol=pickle.HIGHEST_PROTOCOL)
         except Exception as e:
@@ -203,6 +446,41 @@ class SocketTransport(Transport):
                 f"picklable, which SocketTransport requires to cross "
                 f"process boundaries: {e}") from e
 
+    @classmethod
+    def _quick_picklable(cls, data, depth: int = 0) -> bool:
+        """Structural fast path for the common payload shapes (numbers,
+        strings, numpy arrays, shallow containers of those) so fire-time
+        validation does not pickle a large array twice.  Exact-type checks
+        only: a subclass (e.g. a defaultdict with a lambda factory) may
+        carry unpicklable state, so anything this cannot *prove* falls
+        back to a real ``pickle.dumps`` probe."""
+        t = type(data)
+        if t in _PLAIN:
+            return True
+        if t is np.ndarray or isinstance(data, np.generic):
+            # hasobject also catches structured dtypes with object fields,
+            # which a plain `dtype != object` comparison lets through
+            return not data.dtype.hasobject
+        if depth >= 3:
+            return False
+        if t in (list, tuple, set, frozenset):
+            return all(cls._quick_picklable(v, depth + 1) for v in data)
+        if t is dict:
+            return all(cls._quick_picklable(k, depth + 1)
+                       and cls._quick_picklable(v, depth + 1)
+                       for k, v in data.items())
+        return False
+
+    @staticmethod
+    def _late_encodable(msg: Message) -> bool:
+        """True when the writer thread may serialise ``msg`` lazily: the
+        payload was handed over (``owned``) or is deeply immutable, so no
+        fire-time snapshot is required."""
+        if getattr(msg, "owned", False):
+            return True
+        return (msg.kind == EVENT
+                and type(msg.payload.data) in _IMMUTABLE)
+
     def _encode_msg(self, msg: Message) -> bytes:
         try:
             return frames.encode((frames.MSG, msg))
@@ -210,6 +488,17 @@ class SocketTransport(Transport):
             raise TypeError(
                 f"message to rank {msg.dst} (eid "
                 f"{getattr(msg.payload, 'eid', msg.payload)!r}) cannot be "
+                f"pickled for SocketTransport: {e}") from e
+
+    def _encode_snapshot(self, msgs: List[Message]) -> List:
+        """Fire-time snapshot of a batch: one in-band batch frame."""
+        try:
+            return frames.encode_batch(msgs, oob=False)
+        except Exception as e:
+            m = msgs[0]
+            raise TypeError(
+                f"message to rank {m.dst} (eid "
+                f"{getattr(m.payload, 'eid', m.payload)!r}) cannot be "
                 f"pickled for SocketTransport: {e}") from e
 
     def set_deliver(self, fn: Callable[[List[Message]], None]) -> None:
@@ -252,6 +541,16 @@ class SocketTransport(Transport):
             with self._mu:
                 self._dropped += 1
             return False
+        if self.coalesce:
+            if msg.kind == EVENT:
+                with self._mu:
+                    self._sent_to[msg.dst] += 1
+            if self._late_encodable(msg):
+                self._enqueue(msg.dst, [msg])
+            else:
+                self._enqueue(msg.dst, [("enc", self._encode_snapshot([msg]),
+                                         1 if msg.kind == EVENT else 0)])
+            return True
         data = self._encode_msg(msg)
         try:
             with self._send_mu[msg.dst]:
@@ -279,6 +578,29 @@ class SocketTransport(Transport):
             if self._dead[dst]:
                 with self._mu:
                     self._dropped += len(ms)
+                continue
+            if self.coalesce:
+                n_ev = sum(1 for m in ms if m.kind == EVENT)
+                with self._mu:
+                    self._sent_to[dst] += n_ev
+                items: List = []
+                snap: List[Message] = []
+                snap_ev = 0
+                for m in ms:
+                    if self._late_encodable(m):
+                        if snap:
+                            items.append(("enc", self._encode_snapshot(snap),
+                                          snap_ev))
+                            snap, snap_ev = [], 0
+                        items.append(m)
+                    else:
+                        snap.append(m)
+                        snap_ev += 1 if m.kind == EVENT else 0
+                if snap:
+                    items.append(("enc", self._encode_snapshot(snap),
+                                  snap_ev))
+                self._enqueue(dst, items)
+                delivered += len(ms)
                 continue
             blob = b"".join(self._encode_msg(m) for m in ms)
             try:
@@ -365,6 +687,7 @@ class SocketTransport(Transport):
         if sock is not None:
             self._teardown(sock)  # plain close() would leave the reader's
             # makefile fd alive and keep delivering the dead rank's events
+        self._drop_queue(rank)
 
     @property
     def dropped(self) -> int:
@@ -385,20 +708,34 @@ class SocketTransport(Transport):
     # -------------------------------------------------------------- close
     def close(self) -> None:
         """Clean shutdown: BYE every live peer (so their failure detectors
-        stay quiet), close all sockets, release blocked receivers."""
+        stay quiet), flush the write queues, close all sockets, release
+        blocked receivers."""
         with self._mu:
-            if self._closing:
+            if self._close_started:
                 return
-            self._closing = True
+            self._close_started = True
         self._hb_stop.set()
         bye = frames.encode((frames.BYE,))
-        for p, sock in self._peers.items():
-            if not self._dead[p]:
-                try:
-                    with self._send_mu[p]:
-                        sock.sendall(bye)
-                except OSError:
-                    pass
+        if self.coalesce:
+            # the BYE must take the same path as queued data so it is the
+            # *last* frame on the wire; then wait for the writers to drain
+            for p in self._peers:
+                if not self._dead[p]:
+                    self._enqueue(p, [("enc", [bye], 0)])
+            self.flush(timeout=1.0)
+        else:
+            for p, sock in self._peers.items():
+                if not self._dead[p]:
+                    try:
+                        with self._send_mu[p]:
+                            sock.sendall(bye)
+                    except OSError:
+                        pass
+        with self._mu:
+            self._closing = True
+        for cv in self._sendcv.values():
+            with cv:
+                cv.notify_all()  # writers observe _closing and exit
         for sock in self._peers.values():
             self._teardown(sock)  # readers unblock with EOF -> clean exit
         self.wake(self.rank)

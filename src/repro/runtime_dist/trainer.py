@@ -381,8 +381,13 @@ class EventDrivenTrainer:
     def _on_rank_failed(self, ctx: edat.Context, events):
         st = self.states[ctx.rank]
         dead = events[0].data
-        if dead in st.alive:
-            st.alive.remove(dead)
+        if dead not in st.alive:
+            # already handled: the heartbeat-suspect path beat this event
+            # (or vice versa).  Firing "recover" again here was the known
+            # duplicate-recovery flake — two rollbacks racing the restarted
+            # step chain could diverge the replicas.
+            return
+        st.alive.remove(dead)
         # leader triggers a coordinated rollback to the last durable ckpt
         if ctx.rank == min(st.alive) and self.cfg.ckpt_dir:
             step = ckpt_store.latest_step(self.cfg.ckpt_dir) or 0

@@ -18,9 +18,15 @@ except ImportError:
 
     given = settings = _skip_no_hypothesis
 
-    class st:  # placeholder strategies; never executed without hypothesis
+    class _PlaceholderStrategies:
+        """Placeholder strategies; never executed without hypothesis —
+        any attribute resolves to an inert callable."""
+
         @staticmethod
         def _placeholder(*args, **kwargs):
             return None
 
-        integers = lists = floats = booleans = text = _placeholder
+        def __getattr__(self, name):
+            return self._placeholder
+
+    st = _PlaceholderStrategies()

@@ -520,3 +520,155 @@ def _boom_main(ctx):
 def test_spawned_task_error_fails_every_rank():
     with pytest.raises(RuntimeError, match="spawned-boom"):
         launch_processes(2, _boom_main, timeout=30)
+
+
+# ------------------------------------------------- coalescing invariants
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_coalescing_fifo_no_loss_randomized(seed):
+    """Per-(src,dst) FIFO and zero event loss must hold across randomized
+    batch boundaries (tiny max_batch_bytes forces frame splits; a nonzero
+    flush_interval makes the writer batch aggressively) and across forced
+    partial ``drain()``s on the receiver — for every encode path: deferred
+    (immutable ints), snapshot (mutable dicts), and owned/zero-copy
+    (numpy with ref semantics)."""
+    import random
+    rng = random.Random(seed)
+    import numpy as np
+    kw = dict(flush_interval=rng.choice([0.0, 0.001]),
+              max_batch_bytes=rng.choice([128, 4096, 1 << 20]))
+    ta, tb = _pair(**kw)
+    N = 400
+    try:
+        i = 0
+        while i < N:
+            burst = min(rng.randrange(1, 12), N - i)
+            msgs = []
+            for k in range(i, i + burst):
+                style = rng.randrange(3)
+                if style == 0:       # deferred path (immutable payload)
+                    m = _ev(0, 1, "seq", k)
+                elif style == 1:     # snapshot path (mutable payload)
+                    m = _ev(0, 1, "seq", {"i": k})
+                else:                # owned path (zero-copy oob numpy)
+                    m = _ev(0, 1, "seq", np.array([k], np.int64))
+                    m.owned = True
+                msgs.append(m)
+            if rng.random() < 0.5:
+                for m in msgs:
+                    assert ta.send(m)
+            else:
+                assert ta.send_many(msgs) == len(msgs)
+            i += burst
+        got = []
+        deadline = time.monotonic() + 30
+        while len(got) < N and time.monotonic() < deadline:
+            if rng.random() < 0.5:
+                out = tb.drain(1, max_n=rng.randrange(1, 7))  # forced partial
+                if not out:
+                    time.sleep(0.002)
+            else:
+                out = tb.recv_many(1, timeout=0.2)
+            for m in out:
+                d = m.payload.data
+                if isinstance(d, dict):
+                    got.append(d["i"])
+                elif isinstance(d, int):
+                    got.append(d)
+                else:
+                    got.append(int(d[0]))
+        assert got == list(range(N)), f"loss/reorder with {kw}"
+        assert ta.sent_vector() == [0, N]
+        assert tb.recv_vector() == [N, 0]
+    finally:
+        ta.close()
+        tb.close()
+
+
+def test_coalescing_snapshot_at_fire_mutable_payload():
+    """A mutable payload mutated right after send() must arrive with its
+    fire-time value: the coalescing layer snapshots (pickles) non-owned
+    payloads synchronously inside send, not in the writer thread."""
+    import numpy as np
+    ta, tb = _pair(flush_interval=0.05)  # writer waits: mutation races it
+    try:
+        buf = np.array([1, 2, 3])
+        assert ta.send(_ev(0, 1, "snap", {"buf": buf}))
+        buf[:] = 99  # post-fire mutation must not be observable
+        deadline = time.monotonic() + 10
+        got = []
+        while not got and time.monotonic() < deadline:
+            got = tb.recv_many(1, timeout=0.5)
+        assert list(got[0].payload.data["buf"]) == [1, 2, 3]
+    finally:
+        ta.close()
+        tb.close()
+
+
+def test_coalescing_owned_numpy_arrives_writable():
+    """Owned (ref) numpy payloads travel zero-copy and must reconstruct
+    as writable arrays on the receiving side."""
+    import numpy as np
+    ta, tb = _pair()
+    try:
+        m = _ev(0, 1, "z", np.arange(1000, dtype=np.float32))
+        m.owned = True
+        assert ta.send(m)
+        deadline = time.monotonic() + 10
+        got = []
+        while not got and time.monotonic() < deadline:
+            got = tb.recv_many(1, timeout=0.5)
+        arr = got[0].payload.data
+        np.testing.assert_array_equal(arr,
+                                      np.arange(1000, dtype=np.float32))
+        arr[:] = 0.0  # raises if the zero-copy view came back read-only
+    finally:
+        ta.close()
+        tb.close()
+
+
+def test_transport_flush_drains_queue():
+    ta, tb = _pair(flush_interval=0.02)
+    try:
+        ta.send_many([_ev(0, 1, "f", i) for i in range(50)])
+        assert ta.flush(timeout=10.0)
+        deadline = time.monotonic() + 5
+        got = []
+        while len(got) < 50 and time.monotonic() < deadline:
+            got += tb.recv_many(1, timeout=0.5)
+        assert len(got) == 50
+    finally:
+        ta.close()
+        tb.close()
+
+
+@pytest.mark.parametrize("progress", ["thread", "worker"])
+def test_distributed_coalesced_stream_both_modes(progress):
+    """End-to-end dual-Runtime run over the coalescing transport in both
+    progress modes: a mixed stream (fire + fire_batch, plain + ref numpy
+    payloads) keeps FIFO order and loses nothing."""
+    import numpy as np
+    N = 60
+    got = []
+
+    def sink(ctx, events):
+        d = events[0].data
+        got.append(int(d["i"]) if isinstance(d, dict) else int(d[0]))
+
+    def main(ctx):
+        if ctx.rank == 0:
+            ctx.submit_persistent(sink, deps=[(1, "s")])
+        else:
+            i = 0
+            while i < N:
+                if i % 3 == 0:
+                    ctx.fire(0, "s", np.array([i], np.int64), ref=True)
+                    i += 1
+                else:
+                    n = min(3, N - i)
+                    ctx.fire_batch([(0, "s", {"i": i + k})
+                                    for k in range(n)])
+                    i += n
+
+    res = _dual_runtime_run(main, progress=progress)
+    assert [r[0] for r in res] == ["ok", "ok"]
+    assert got == list(range(N))

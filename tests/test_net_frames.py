@@ -1,0 +1,292 @@
+"""Property/fuzz tests for the repro.net frame codec.
+
+The decoding contract (relied on by SocketTransport's reader threads):
+
+* anything encoded by ``encode`` / ``encode_batch`` roundtrips exactly;
+* a truncated stream / mid-frame EOF decodes to ``None`` (socket paths)
+  or leaves the partial frame unconsumed (``decode_buffer``);
+* a garbage length header or corrupt body raises (socket paths) or flags
+  ``corrupt`` (``decode_buffer``) — decoders NEVER hang a reader thread
+  on a complete-but-bad byte stream.
+
+Property tests use hypothesis when installed (``_hypothesis_optional``);
+the seeded-random fuzz tests below run everywhere.
+"""
+import io
+import pickle
+import random
+import socket
+import struct
+import threading
+
+import numpy as np
+import pytest
+from _hypothesis_optional import given, settings, st
+
+from repro.net import frames
+
+
+def _cat(pieces) -> bytes:
+    return b"".join(bytes(p) for p in pieces)
+
+
+def _roundtrip_batch(objs, oob=True):
+    blob = _cat(frames.encode_batch(objs, oob=oob))
+    decoded, used, corrupt = frames.decode_buffer(bytearray(blob))
+    assert not corrupt and used == len(blob)
+    assert len(decoded) == 1
+    kind, got = decoded[0]
+    assert kind == frames.MSGS
+    return got
+
+
+# ------------------------------------------------------------- roundtrips
+def test_plain_frame_roundtrip_over_socket():
+    a, b = socket.socketpair()
+    try:
+        payload = ("msg", {"x": [1, 2.5, "s"], "y": None})
+        frames.send_frame(a, payload)
+        assert frames.recv_frame(b) == payload
+    finally:
+        a.close()
+        b.close()
+
+
+def test_batch_frame_roundtrip_inband_and_oob():
+    objs = [{"i": i, "arr": np.arange(i + 1, dtype=np.int64)}
+            for i in range(5)]
+    for oob in (True, False):
+        got = _roundtrip_batch(objs, oob=oob)
+        assert len(got) == len(objs)
+        for o, g in zip(objs, got):
+            assert g["i"] == o["i"]
+            np.testing.assert_array_equal(g["arr"], o["arr"])
+
+
+def test_batch_oob_arrays_decode_writable():
+    """Zero-copy out-of-band numpy payloads must reconstruct as *writable*
+    arrays (they are views over the mutable receive buffer)."""
+    arr = np.arange(100, dtype=np.float64)
+    (got,) = _roundtrip_batch([arr], oob=True)
+    np.testing.assert_array_equal(got, arr)
+    got[:] = -1.0  # raises ValueError if the buffer came back read-only
+
+
+def test_batch_oob_noncontiguous_falls_back():
+    arr = np.arange(64, dtype=np.int64).reshape(8, 8).T  # not C-contiguous
+    (got,) = _roundtrip_batch([arr], oob=True)
+    np.testing.assert_array_equal(got, arr)
+
+
+def test_batch_roundtrip_over_socket_and_buffered():
+    objs = [np.arange(4), "text", 7]
+    blob = _cat(frames.encode_batch(objs))
+    a, b = socket.socketpair()
+    try:
+        a.sendall(blob)
+        kind, got = frames.recv_frame(b)
+        assert kind == frames.MSGS and got[1] == "text" and got[2] == 7
+        np.testing.assert_array_equal(got[0], objs[0])
+    finally:
+        a.close()
+        b.close()
+    kind, got = frames.recv_frame_buffered(io.BytesIO(blob))
+    assert kind == frames.MSGS and len(got) == 3
+
+
+def test_decode_buffer_many_mixed_frames():
+    objs = list(range(10))
+    blob = (frames.encode(("hb",))
+            + _cat(frames.encode_batch(objs))
+            + frames.encode(("msg", "single"))
+            + frames.encode(("bye",)))
+    decoded, used, corrupt = frames.decode_buffer(bytearray(blob))
+    assert not corrupt and used == len(blob)
+    assert [d[0] for d in decoded] == ["hb", frames.MSGS, "msg", "bye"]
+    assert decoded[1][1] == objs
+
+
+# ----------------------------------------------- truncation / garbage input
+def test_truncated_stream_returns_none():
+    blob = frames.encode(("msg", list(range(100))))
+    for cut in (1, 3, 4, 10, len(blob) - 1):
+        a, b = socket.socketpair()
+        try:
+            a.sendall(blob[:cut])
+            a.close()  # EOF mid-frame
+            assert frames.recv_frame(b) is None
+        finally:
+            b.close()
+        assert frames.recv_frame_buffered(io.BytesIO(blob[:cut])) is None
+
+
+def test_decode_buffer_leaves_partial_frame_unconsumed():
+    blob = _cat(frames.encode_batch([np.arange(50)]))
+    for cut in (0, 1, 4, 20, len(blob) - 1):
+        decoded, used, corrupt = frames.decode_buffer(bytearray(blob[:cut]))
+        assert decoded == [] and used == 0 and not corrupt
+    # completing the buffer then decodes exactly one frame
+    decoded, used, corrupt = frames.decode_buffer(bytearray(blob))
+    assert len(decoded) == 1 and used == len(blob) and not corrupt
+
+
+def test_garbage_length_header_raises_not_hangs():
+    huge = struct.pack(">I", frames.MAX_FRAME + 1) + b"x" * 16
+    with pytest.raises(ValueError):
+        frames.recv_frame_buffered(io.BytesIO(huge))
+    a, b = socket.socketpair()
+    try:
+        a.sendall(huge)
+        with pytest.raises(ValueError):
+            frames.recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+    _, _, corrupt = frames.decode_buffer(bytearray(huge))
+    assert corrupt
+
+
+def test_corrupt_body_flags_not_hangs():
+    # well-formed header, garbage pickle body
+    bad = struct.pack(">I", 8) + b"\xde\xad\xbe\xef\xde\xad\xbe\xef"
+    decoded, used, corrupt = frames.decode_buffer(bytearray(bad))
+    assert corrupt and decoded == []
+    # batch bit set, garbage buffer table (claims absurd buffer count)
+    body = struct.pack(">I", 0xFFFFFF) + b"z" * 12
+    bad2 = struct.pack(">I", len(body) | frames.BATCH_BIT) + body
+    decoded, used, corrupt = frames.decode_buffer(bytearray(bad2))
+    assert corrupt
+    with pytest.raises(Exception):
+        frames.recv_frame_buffered(io.BytesIO(bad2))
+
+
+def test_reader_never_hangs_on_partial_then_close():
+    """A reader blocked mid-frame must return (None) promptly when the
+    peer goes away — this is what keeps SocketTransport reader threads
+    from wedging on a crashed sender."""
+    a, b = socket.socketpair()
+    out = []
+
+    def read():
+        out.append(frames.recv_frame(b))
+
+    t = threading.Thread(target=read, daemon=True)
+    t.start()
+    a.sendall(struct.pack(">I", 1000) + b"partial")
+    a.shutdown(socket.SHUT_RDWR)
+    a.close()
+    t.join(5.0)
+    assert not t.is_alive(), "reader wedged on mid-frame EOF"
+    assert out == [None]
+    b.close()
+
+
+# ------------------------------------------------------- seeded random fuzz
+def _random_payload(rng: random.Random, depth=0):
+    kind = rng.randrange(7 if depth < 2 else 5)
+    if kind == 0:
+        return rng.randrange(-10**9, 10**9)
+    if kind == 1:
+        return rng.random()
+    if kind == 2:
+        return "".join(chr(rng.randrange(32, 0x2FF))
+                       for _ in range(rng.randrange(20)))
+    if kind == 3:
+        return bytes(rng.randrange(256) for _ in range(rng.randrange(30)))
+    if kind == 4:
+        dt = rng.choice([np.int8, np.int64, np.float32, np.float64])
+        return (np.arange(rng.randrange(1, 200)).astype(dt)
+                if rng.random() < 0.5 else
+                np.frombuffer(bytes(rng.randrange(256)
+                                    for _ in range(8 * 8)), np.float64))
+    if kind == 5:
+        return [_random_payload(rng, depth + 1)
+                for _ in range(rng.randrange(4))]
+    return {f"k{i}": _random_payload(rng, depth + 1)
+            for i in range(rng.randrange(4))}
+
+
+def _eq(a, b):
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        return (np.asarray(a).dtype == np.asarray(b).dtype
+                and np.array_equal(np.asarray(a), np.asarray(b)))
+    if isinstance(a, list):
+        return (isinstance(b, list) and len(a) == len(b)
+                and all(_eq(x, y) for x, y in zip(a, b)))
+    if isinstance(a, dict):
+        return (isinstance(b, dict) and a.keys() == b.keys()
+                and all(_eq(v, b[k]) for k, v in a.items()))
+    return a == b
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_fuzz_roundtrip_random_payloads_random_chunking(seed):
+    """Arbitrary payload trees, mixed frame kinds, delivered to the
+    incremental decoder in random-sized chunks (simulating TCP segmenting)
+    must reproduce the exact frame sequence."""
+    rng = random.Random(seed)
+    sent = []
+    wire = bytearray()
+    for _ in range(30):
+        if rng.random() < 0.5:
+            objs = [_random_payload(rng) for _ in range(rng.randrange(1, 6))]
+            sent.append((frames.MSGS, objs))
+            wire += _cat(frames.encode_batch(objs,
+                                             oob=rng.random() < 0.7))
+        else:
+            obj = ("msg", _random_payload(rng))
+            sent.append(obj)
+            wire += frames.encode(obj)
+    got = []
+    buf = bytearray()
+    i = 0
+    while i < len(wire) or buf:
+        step = rng.randrange(1, 4096)
+        buf += wire[i:i + step]
+        i += step
+        decoded, used, corrupt = frames.decode_buffer(buf)
+        assert not corrupt
+        del buf[:used]
+        got.extend(decoded)
+        if i >= len(wire) and not decoded and used == 0:
+            break
+    assert len(got) == len(sent)
+    for g, s in zip(got, sent):
+        assert g[0] == s[0]
+        assert _eq(list(g[1]) if g[0] == frames.MSGS else g[1],
+                   list(s[1]) if s[0] == frames.MSGS else s[1])
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_fuzz_garbage_never_hangs_or_crashes_decoder(seed):
+    """Pure noise (and noise spliced into valid traffic) must terminate
+    the decoder with corrupt=True or partial-wait — never an unhandled
+    exception, never an infinite loop."""
+    rng = random.Random(1000 + seed)
+    for _ in range(50):
+        junk = bytearray(rng.randrange(256)
+                         for _ in range(rng.randrange(1, 2000)))
+        if rng.random() < 0.3:  # splice junk after a valid frame
+            junk = bytearray(frames.encode(("hb",))) + junk
+        decoded, used, corrupt = frames.decode_buffer(junk)
+        assert used <= len(junk)
+        assert corrupt or used == 0 or decoded  # progressed or waiting
+
+
+# ---------------------------------------------------- hypothesis properties
+@given(st.lists(st.one_of(st.integers(), st.text(), st.booleans(),
+                          st.floats(allow_nan=False),
+                          st.binary(max_size=64)),
+                max_size=20))
+@settings(max_examples=50, deadline=None)
+def test_property_batch_roundtrip(objs):
+    for oob in (True, False):
+        got = _roundtrip_batch(objs, oob=oob)
+        assert got == objs
+
+
+@given(st.binary(max_size=512))
+@settings(max_examples=100, deadline=None)
+def test_property_arbitrary_bytes_never_hang(data):
+    decoded, used, corrupt = frames.decode_buffer(bytearray(data))
+    assert used <= len(data)

@@ -1,0 +1,82 @@
+"""The paper's use-cases running *distributed*: Graph500 BFS and MONC
+in-situ analytics across real spawned OS processes over the coalescing
+SocketTransport.
+
+Acceptance-grade checks:
+
+* distributed BFS parent arrays are **identical** to the in-proc BSP
+  reference (both resolve same-level parent claims in rank order, so the
+  trees match bitwise) across multiple seeds and rank counts;
+* a rank SIGKILLed mid-traversal terminates every survivor through the
+  RANK_FAILED fail-stop path — no hang to the join deadline;
+* the distributed analytics pipeline reduces every (field, timestep)
+  exactly once.
+"""
+import functools
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.analytics import InsituCfg, distributed_insitu
+from repro.graph import (ReferenceBFS, build_csr, distributed_bfs,
+                         kronecker_edges)
+from repro.graph.bfs import _spawned_bfs_main
+from repro.net.launch import ProcessGroup
+
+pytestmark = pytest.mark.timeout(300)
+
+
+@pytest.mark.parametrize("seed,n_ranks", [(5, 2), (11, 3), (23, 4)])
+def test_distributed_bfs_matches_bsp_reference(seed, n_ranks):
+    """2-4 spawned processes; parent array must equal the BSP reference
+    bitwise (not just same reachable set) on Kronecker graphs."""
+    scale, edgefactor = 8, 8
+    parent, info = distributed_bfs(n_ranks, scale, edgefactor, seed=seed)
+    edges = kronecker_edges(scale, edgefactor, seed)
+    csr = build_csr(edges, 1 << scale, n_ranks)
+    ref = ReferenceBFS(csr).run(info["root"])
+    assert np.array_equal(parent, ref)
+    assert info["traversed"] > 0 and info["teps"] > 0
+
+
+def test_distributed_bfs_rank_kill_terminates_via_rank_failed(tmp_path):
+    """SIGKILL a rank mid-traversal: the victim's visit task stalls (so
+    the BFS is provably in flight), the parent kills it, and every
+    survivor must exit promptly through the RANK_FAILED fail-stop task —
+    not hang inside the ALL-dependency until the join deadline."""
+    ready = str(tmp_path / "ready")
+    pg = ProcessGroup(
+        3,
+        functools.partial(_spawned_bfs_main, scale=8, edgefactor=8,
+                          seed=5, root=1, stall=(1, 2, 300.0),
+                          ready_path=ready),
+        run_timeout=60, hb_interval=0.2, hb_timeout=1.5)
+    pg.start()
+    deadline = time.monotonic() + 60
+    while not os.path.exists(ready) and time.monotonic() < deadline:
+        time.sleep(0.05)
+    assert os.path.exists(ready), "rank 1 never reached the stall level"
+    time.sleep(0.2)
+    t0 = time.monotonic()
+    pg.kill(1)
+    pg.wait(60, check=False)
+    took = time.monotonic() - t0
+    codes = pg.exitcodes()
+    assert codes[1] != 0                       # the victim
+    # survivors exited by themselves (EdatTaskError from the fail-stop
+    # task), well before the 60s straggler deadline would have killed them
+    assert codes[0] not in (None,) and codes[2] not in (None,)
+    assert codes[0] != 0 and codes[2] != 0     # aborted, not clean exit
+    assert took < 45, f"survivors only died at the deadline ({took:.1f}s)"
+
+
+def test_distributed_insitu_reduces_every_timestep():
+    cfg = InsituCfg(n_analytics=2, items_per_producer=16, field_elems=128,
+                    n_fields=2)
+    res = distributed_insitu(cfg)
+    assert res["results"] == cfg.items_per_producer
+    assert res["raw_items"] == 2 * cfg.items_per_producer
+    assert res["mean_latency_s"] > 0
+    assert res["bandwidth_items_s"] > 0
