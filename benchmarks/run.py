@@ -48,6 +48,15 @@ def main(argv=None):
     insitu.run(analytics=(1, 2), items=32, transport="socket",
                out=os.path.join(args.outdir, "insitu_socket.json"))
 
+    print("== elastic trainer: in-proc vs distributed (steps/s) ==")
+    from benchmarks import trainer_scaling
+    trainer_scaling.run(steps=8 if not args.full else 20, ranks=(1, 2),
+                        out=os.path.join(args.outdir, "trainer.json"))
+    trainer_scaling.run(steps=8 if not args.full else 20, ranks=(2, 4),
+                        transport="socket",
+                        out=os.path.join(args.outdir,
+                                         "trainer_socket.json"))
+
     print("== roofline (from dry-run artifacts, if present) ==")
     from benchmarks import roofline
     for mesh in ("pod16x16", "pod2x16x16"):

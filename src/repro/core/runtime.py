@@ -13,9 +13,11 @@ four-counter logic itself (two consecutive idle polls with globally
 ``sent == received`` and empty mailboxes) is unchanged.
 
 A ``Runtime`` may host *all* ranks (threads-as-ranks over
-:class:`InProcTransport`) or a subset of them (one process per rank over
-:class:`repro.net.SocketTransport`, declared via the transport's
-``local_ranks``).  In the distributed case every cross-rank interaction —
+:class:`InProcTransport`) or a subset of them (one OS process hosting one
+*or several* ranks over :class:`repro.net.SocketTransport`, declared via
+the transport's ``local_ranks``; co-located ranks exchange messages
+through the transport's in-process loopback).  In the distributed case
+every cross-rank interaction —
 status polling for the Mattern detector, the termination broadcast, task
 failure propagation, detector wakeups — travels through the transport as
 CONTROL messages; rank 0 owns the detector, the other processes block until
@@ -227,11 +229,11 @@ class Runtime:
             # heartbeat/EOF peer-failure detection feeds RANK_FAILED
             self.transport.on_peer_dead = self._on_peer_dead
             set_deliver = getattr(self.transport, "set_deliver", None)
-            if set_deliver is not None and len(self._local_ranks) == 1:
+            if set_deliver is not None:
                 # push mode: the transport's reader threads hand batches
-                # straight to delivery, skipping the progress-thread hop
-                only = self._local_ranks[0]
-                set_deliver(lambda msgs: self._handle_many(only, msgs))
+                # straight to delivery, skipping the progress-thread hop;
+                # batches may mix co-located destination ranks
+                set_deliver(self._push_deliver)
         if (progress == "worker"
                 and type(self.transport).set_notify
                 is not Transport.set_notify):
@@ -293,8 +295,11 @@ class Runtime:
         targets = self._targets(src, target)
         # a serialising transport pickles every remote message synchronously
         # inside send — that IS the fire-time snapshot, so the defensive
-        # deep-copy is only needed when a loopback target shares the object
-        copy_free = ref or (self.transport.serializes and src not in targets)
+        # deep-copy is only needed when some target is hosted by THIS
+        # process (self-sends and co-located ranks take the transport's
+        # loopback, which delivers the object by reference)
+        copy_free = ref or (self.transport.serializes
+                            and all(t not in self._sched for t in targets))
         payload = data if copy_free else copy_payload(data)
         # ref=True hands payload ownership over (EDAT_ADDRESS): a deferred-
         # write transport may then serialise it lazily and zero-copy
@@ -325,7 +330,8 @@ class Runtime:
             self.transport.validate_payload(data)
             targets = self._targets(src, target)
             copy_free = ref or (self.transport.serializes
-                                and src not in targets)
+                                and all(t not in self._sched
+                                        for t in targets))
             payload = data if copy_free else copy_payload(data)
             for t in targets:
                 msgs.append(Message(EVENT, src, t,
@@ -369,6 +375,17 @@ class Runtime:
             return False
         self._handle_many(rank, msgs)
         return True
+
+    def _push_deliver(self, msgs: List[Message]) -> None:
+        """Push-mode entry from a distributed transport's reader threads:
+        route each message to its destination rank's scheduler (one call
+        may carry messages for several co-located ranks)."""
+        by_dst: Dict[int, List[Message]] = {}
+        for m in msgs:
+            by_dst.setdefault(m.dst, []).append(m)
+        for r, ms in by_dst.items():
+            if r in self._sched:
+                self._handle_many(r, ms)
 
     def _handle_many(self, rank: int, msgs: List[Message]) -> None:
         events = [m.payload for m in msgs if m.kind == EVENT]
@@ -420,7 +437,10 @@ class Runtime:
         st = self._sched[rank].status()
         st["rank"] = rank
         st["mailbox"] = self.transport.pending(rank)
-        if rank == self._local_ranks[0]:
+        reporter = next((r for r in self._local_ranks
+                         if not self.transport.is_dead(r)),
+                        self._local_ranks[0])
+        if rank == reporter:
             with self._timer_cv:
                 st["timers"] = self._pending_timers
             st["dropped"] = self.transport.dropped

@@ -1,34 +1,49 @@
 """Rendezvous: wire up all-pairs connections for :class:`SocketTransport`.
 
 Coordinator pattern (rank 0 + environment addressing, the usual launcher
-contract of distributed runtimes):
+contract of distributed runtimes).  The unit of rendezvous is a *process*,
+identified by the lowest rank it hosts (its **lead**) — a process may host
+several ranks (``local_ranks``), and co-located ranks share the process's
+connections:
 
-1. every rank opens a listening socket on an ephemeral port;
-2. rank 0 additionally listens on the well-known *coordinator* address;
-3. ranks 1..n-1 dial the coordinator and register their listen address;
-4. rank 0 replies to each with the complete ``{rank: address}`` map;
-5. each rank dials every lower-numbered rank (identified by a HELLO frame),
-   accepts from every higher-numbered one — one TCP connection per
-   unordered pair, used bidirectionally.
+1. every process opens a listening socket on an ephemeral port;
+2. the process hosting rank 0 additionally listens on the well-known
+   *coordinator* address (with a bind-retry loop: the launcher probes a
+   free port and releases it before the child re-binds it, so a TOCTOU
+   loser waits for the squatter instead of crashing);
+3. the other processes dial the coordinator and register their lead,
+   hosted ranks, and listen address (re-dialing if they reached a
+   squatter that hung up or spoke garbage instead of the placement
+   reply — the dial side of the same race);
+4. the coordinator replies to each with the complete placement
+   ``{lead: (address, ranks)}``;
+5. each process dials every lower-lead process (identified by a HELLO
+   frame), accepts from every higher one — one TCP connection per
+   unordered process pair, used bidirectionally by all hosted ranks.
 
-Because every rank listens *before* registering with the coordinator, no
-peer can learn an address that is not yet accepting — dialing needs no
+Because every process listens *before* registering with the coordinator,
+no peer can learn an address that is not yet accepting — dialing needs no
 retry loop (a short one is kept for OS-level accept-queue hiccups).
 
 Environment contract (used by ``python -m repro.net.launch`` and usable by
 any external process manager, e.g. one process per node under slurm/k8s):
 
-* ``EDAT_RANK``    — this process's rank;
-* ``EDAT_NRANKS``  — world size;
-* ``EDAT_COORD``   — ``host:port`` of the rank-0 coordinator;
-* ``EDAT_HOST``    — optional bind/advertise host (default ``127.0.0.1``).
+* ``EDAT_RANK``        — this process's lead rank;
+* ``EDAT_LOCAL_RANKS`` — optional comma list of ranks this process hosts
+  (default: just ``EDAT_RANK``);
+* ``EDAT_NRANKS``      — world size;
+* ``EDAT_COORD``       — ``host:port`` of the rank-0 coordinator;
+* ``EDAT_HOST``        — optional bind/advertise host (default
+  ``127.0.0.1``).
 """
 from __future__ import annotations
 
+import errno
 import os
+import pickle
 import socket
 import time
-from typing import Dict, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 from . import frames
 from .socket_transport import SocketTransport
@@ -42,6 +57,24 @@ def _listener(host: str, port: int = 0, backlog: int = 64) -> socket.socket:
     srv.bind((host, port))
     srv.listen(backlog)
     return srv
+
+
+def _listener_retry(host: str, port: int, deadline: float,
+                    backlog: int = 64) -> socket.socket:
+    """Bind a well-known port, retrying on EADDRINUSE until ``deadline``.
+
+    The coordinator port is probed by the launcher parent and *released*
+    before this child re-binds it — another process can grab it in the
+    gap (the classic free-port TOCTOU).  Retrying turns a transient
+    squatter (TIME_WAIT, a short-lived test socket, a just-exited
+    previous run) into a short wait instead of a crashed world."""
+    while True:
+        try:
+            return _listener(host, port, backlog)
+        except OSError as e:
+            if e.errno != errno.EADDRINUSE or time.monotonic() >= deadline:
+                raise
+            time.sleep(0.05)
 
 
 def _dial(addr: Addr, deadline: float) -> socket.socket:
@@ -63,67 +96,146 @@ def _configure(sock: socket.socket) -> socket.socket:
 
 
 def bootstrap(rank: int, n_ranks: int, coord_addr: Addr, *,
+              local_ranks: Optional[Sequence[int]] = None,
               host: str = "127.0.0.1", timeout: float = 30.0,
               hb_interval: float = 0.5, hb_timeout: float = 5.0,
               **transport_kw) -> SocketTransport:
-    """Run the rendezvous for ``rank`` and return a connected transport.
-    Extra keyword arguments (``coalesce``, ``flush_interval``,
-    ``max_batch_bytes``) pass through to :class:`SocketTransport`."""
-    if n_ranks == 1:
-        return SocketTransport(0, 1, {}, hb_interval=hb_interval,
+    """Run the process-level rendezvous and return a connected transport.
+
+    ``rank`` is this process's lead rank; ``local_ranks`` lists every rank
+    the process hosts (default: just ``rank`` — the classic one-rank-per-
+    process world).  Extra keyword arguments (``coalesce``,
+    ``flush_interval``, ``max_batch_bytes``) pass through to
+    :class:`SocketTransport`."""
+    ranks = tuple(sorted(set(local_ranks))) if local_ranks else (rank,)
+    assert rank == ranks[0], \
+        f"bootstrap rank {rank} must be the lead of local_ranks {ranks}"
+    if len(ranks) == n_ranks:     # one process hosts the whole world
+        return SocketTransport(rank, n_ranks, {}, local_ranks=ranks,
+                               placement={rank: ranks},
+                               hb_interval=hb_interval,
                                hb_timeout=hb_timeout, **transport_kw)
     deadline = time.monotonic() + timeout
     listener = _listener(host)
     my_addr: Addr = (host, listener.getsockname()[1])
 
-    # -- address exchange through the coordinator ---------------------------
+    # -- placement exchange through the coordinator -------------------------
     if rank == 0:
-        coord = _listener(coord_addr[0], coord_addr[1])
+        coord = _listener_retry(coord_addr[0], coord_addr[1], deadline)
         coord.settimeout(timeout)
-        addrs: Dict[int, Addr] = {0: my_addr}
+        world: Dict[int, Tuple[Addr, Tuple[int, ...]]] = {
+            0: (my_addr, ranks)}
+        covered = len(ranks)
         conns = []
         try:
-            while len(addrs) < n_ranks:
+            while covered < n_ranks:
                 c, _ = coord.accept()
                 c.settimeout(timeout)
-                tag, peer_rank, peer_addr = frames.recv_frame(c)
-                assert tag == frames.HELLO
-                addrs[peer_rank] = tuple(peer_addr)
+                try:
+                    frame = frames.recv_frame(c)
+                except (OSError, ValueError, pickle.UnpicklingError,
+                        EOFError):
+                    frame = None
+                # a well-known port attracts strays: squatter-era clients
+                # of another launch, half-closed dials, port scanners.
+                # Anything that is not a plausible HELLO for THIS world
+                # (right shape, in-range non-overlapping ranks) is dropped
+                # instead of crashing or corrupting the placement.
+                if (not isinstance(frame, tuple) or len(frame) != 4
+                        or frame[0] != frames.HELLO):
+                    c.close()
+                    continue
+                _, peer_lead, peer_ranks, peer_addr = frame
+                try:
+                    peer_ranks = tuple(int(r) for r in peer_ranks)
+                    peer_addr = (str(peer_addr[0]), int(peer_addr[1]))
+                except (TypeError, ValueError, IndexError):
+                    c.close()
+                    continue
+                taken = {r for l, (_, rs) in world.items()
+                         if l != peer_lead for r in rs}
+                if (not peer_ranks or peer_lead != peer_ranks[0]
+                        or any(not 0 <= r < n_ranks for r in peer_ranks)
+                        or taken & set(peer_ranks)):
+                    c.close()
+                    continue
+                if peer_lead in world:
+                    # a retrying process re-registers with the SAME addr
+                    # and ranks (its listener never changed); a mismatch
+                    # is a foreign launch colliding on this port
+                    if world[peer_lead] != (peer_addr, peer_ranks):
+                        c.close()
+                        continue
+                else:
+                    covered += len(peer_ranks)
+                    world[peer_lead] = (peer_addr, peer_ranks)
                 conns.append(c)
             for c in conns:
-                frames.send_frame(c, ("addrs", addrs))
+                try:
+                    frames.send_frame(c, ("addrs", world))
+                except OSError:
+                    pass  # a retrier abandoned this connection
         finally:
             for c in conns:
                 c.close()
             coord.close()
     else:
-        c = _dial(coord_addr, deadline)
-        c.settimeout(timeout)
-        try:
-            frames.send_frame(c, (frames.HELLO, rank, my_addr))
-            tag, addrs = frames.recv_frame(c)
-            assert tag == "addrs"
-            addrs = {int(r): tuple(a) for r, a in addrs.items()}
-        finally:
-            c.close()
+        # register-with-retry: until the real coordinator owns the port a
+        # dial may reach a squatter (the same TOCTOU the coordinator's
+        # bind-retry rides out) — EOF, a reset, or garbage instead of the
+        # addrs reply just means "not the coordinator yet, try again"
+        world = None
+        while world is None:
+            if time.monotonic() >= deadline:
+                raise RuntimeError(
+                    f"bootstrap: no coordinator reply from {coord_addr}")
+            c = _dial(coord_addr, deadline)
+            c.settimeout(max(0.1, min(timeout,
+                                      deadline - time.monotonic())))
+            try:
+                frames.send_frame(c, (frames.HELLO, rank, ranks, my_addr))
+                got = frames.recv_frame(c)
+                if (isinstance(got, tuple) and len(got) == 2
+                        and got[0] == "addrs" and isinstance(got[1], dict)):
+                    world = {int(l): ((str(a[0]), int(a[1])),
+                                      tuple(int(r) for r in rs))
+                             for l, (a, rs) in got[1].items()}
+            except (OSError, TypeError, KeyError, IndexError, ValueError,
+                    pickle.UnpicklingError, EOFError):
+                world = None  # squatter hung up / spoke garbage: retry
+            finally:
+                c.close()
+            if world is None:
+                time.sleep(0.1)
+    placement = {l: rs for l, (_, rs) in world.items()}
 
-    # -- all-pairs mesh: dial down, accept up -------------------------------
+    # -- all-pairs process mesh: dial down, accept up -----------------------
     peers: Dict[int, socket.socket] = {}
-    for q in range(rank):
-        s = _dial(addrs[q], deadline)
+    for q in sorted(world):
+        if q >= rank:
+            continue
+        s = _dial(world[q][0], deadline)
         frames.send_frame(s, (frames.HELLO, rank))
         peers[q] = _configure(s)
     listener.settimeout(timeout)
     try:
-        while len(peers) < n_ranks - 1:
+        while len(peers) < len(world) - 1:
             s, _ = listener.accept()
             s.settimeout(timeout)
-            tag, peer_rank = frames.recv_frame(s)
-            assert tag == frames.HELLO and peer_rank > rank
-            peers[peer_rank] = _configure(s)
+            try:
+                frame = frames.recv_frame(s)
+            except (OSError, ValueError, pickle.UnpicklingError, EOFError):
+                frame = None
+            if (not isinstance(frame, tuple) or len(frame) != 2
+                    or frame[0] != frames.HELLO or frame[1] not in world
+                    or frame[1] <= rank or frame[1] in peers):
+                s.close()        # stray connection, not a mesh peer
+                continue
+            peers[frame[1]] = _configure(s)
     finally:
         listener.close()
-    return SocketTransport(rank, n_ranks, peers, hb_interval=hb_interval,
+    return SocketTransport(rank, n_ranks, peers, local_ranks=ranks,
+                           placement=placement, hb_interval=hb_interval,
                            hb_timeout=hb_timeout, **transport_kw)
 
 
@@ -132,5 +244,9 @@ def bootstrap_from_env(**kw) -> SocketTransport:
     rank = int(os.environ["EDAT_RANK"])
     n_ranks = int(os.environ["EDAT_NRANKS"])
     host, port = os.environ["EDAT_COORD"].rsplit(":", 1)
+    local = os.environ.get("EDAT_LOCAL_RANKS")
+    if local:
+        kw.setdefault("local_ranks",
+                      tuple(int(r) for r in local.split(",")))
     kw.setdefault("host", os.environ.get("EDAT_HOST", "127.0.0.1"))
     return bootstrap(rank, n_ranks, (host, int(port)), **kw)

@@ -7,28 +7,35 @@ API (paper's ``mpiexec`` role, for one machine)::
     def main(ctx):            # must be importable (module level): children
         ...                   # are spawned, not forked
 
-    stats = edat.launch_processes(4, main)          # blocks, returns stats
+    stats = edat.launch_processes(4, main)              # 1 rank / process
+    stats = edat.launch_processes(4, main, n_procs=2)   # 2 ranks / process
 
 or, for failure-injection control::
 
-    pg = ProcessGroup(4, main)
+    pg = ProcessGroup(4, main, n_procs=2)
     pg.start()
-    pg.kill(3)                # SIGKILL: the heartbeat detector notices
-    stats = pg.wait()
+    pg.kill(3)                # SIGKILL the process hosting rank 3: every
+    stats = pg.wait()         # rank it hosted dies; survivors' heartbeat
+                              # detectors raise RANK_FAILED for each
 
 CLI::
 
     python -m repro.net.launch --ranks 4 examples/net_pingpong.py:main
-    python -m repro.net.launch -n 2 repro.something:main --progress worker
+    python -m repro.net.launch -n 4 --procs 2 repro.something:main
 
 The spec is ``module.path:callable`` or ``path/to/file.py:callable``
 (callable defaults to ``main``); each child resolves it independently, so
-file-based specs need no importable package.  Children rendezvous through
-the rank-0 coordinator (:mod:`repro.net.bootstrap`); the parent only picks
-the coordinator port, spawns, and reaps.
+file-based specs need no importable package.  With ``n_procs`` (or an
+explicit ``placement`` list of rank tuples) each spawned process hosts a
+contiguous block of ranks — ``main(ctx)`` still runs once per *rank*, and
+co-located ranks exchange events in-process without touching a socket.
+Children rendezvous through the rank-0 coordinator
+(:mod:`repro.net.bootstrap`); the parent only picks the coordinator port,
+spawns, and reaps.
 
-Every child also exports ``EDAT_RANK`` / ``EDAT_NRANKS`` / ``EDAT_COORD``
-so user code can introspect its placement.
+Every child also exports ``EDAT_RANK`` / ``EDAT_LOCAL_RANKS`` /
+``EDAT_NRANKS`` / ``EDAT_COORD`` so user code can introspect its
+placement.
 """
 from __future__ import annotations
 
@@ -40,16 +47,33 @@ import os
 import socket
 import sys
 import time
-from typing import Any, Callable, Dict, Optional, Union
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 MainSpec = Union[Callable, str]
 
 
 def _free_port(host: str = "127.0.0.1") -> int:
+    """Probe a currently-free port.  Inherently racy (the port is released
+    before the coordinator child re-binds it); the bootstrap side closes
+    the race with a bind-retry loop — see
+    :func:`repro.net.bootstrap._listener_retry`."""
     with socket.socket() as s:
         s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         s.bind((host, 0))
         return s.getsockname()[1]
+
+
+def default_placement(n_ranks: int, n_procs: int) -> List[Tuple[int, ...]]:
+    """Contiguous block placement: ``n_ranks`` over ``n_procs`` processes,
+    earlier processes taking the larger blocks."""
+    assert 1 <= n_procs <= n_ranks, (n_ranks, n_procs)
+    base, extra = divmod(n_ranks, n_procs)
+    out, r = [], 0
+    for p in range(n_procs):
+        k = base + (1 if p < extra else 0)
+        out.append(tuple(range(r, r + k)))
+        r += k
+    return out
 
 
 def _resolve_spec(spec: str) -> Callable:
@@ -72,35 +96,47 @@ def _resolve_spec(spec: str) -> Callable:
     return fn
 
 
-def _child_entry(rank: int, n_ranks: int, coord_addr, main: MainSpec,
-                 runtime_kwargs: Dict[str, Any], run_timeout: float,
-                 net: Dict[str, Any], result_q) -> None:
-    os.environ["EDAT_RANK"] = str(rank)
+def _child_entry(ranks: Tuple[int, ...], n_ranks: int, coord_addr,
+                 main: MainSpec, runtime_kwargs: Dict[str, Any],
+                 run_timeout: float, net: Dict[str, Any], result_q,
+                 launch_id: str = "") -> None:
+    os.environ["EDAT_RANK"] = str(ranks[0])
+    os.environ["EDAT_LOCAL_RANKS"] = ",".join(str(r) for r in ranks)
     os.environ["EDAT_NRANKS"] = str(n_ranks)
     os.environ["EDAT_COORD"] = f"{coord_addr[0]}:{coord_addr[1]}"
+    if launch_id:
+        # unique per ProcessGroup.start(): lets user code key shared
+        # scratch space to THIS launch (a reused coordinator port must
+        # not resurrect a previous run's on-disk state)
+        os.environ["EDAT_LAUNCH_ID"] = launch_id
     try:
         from repro.core.runtime import Runtime
         from .bootstrap import bootstrap
         if isinstance(main, str):
             main = _resolve_spec(main)
-        transport = bootstrap(rank, n_ranks, coord_addr, **net)
+        transport = bootstrap(ranks[0], n_ranks, coord_addr,
+                              local_ranks=ranks, **net)
         rt = Runtime(n_ranks, transport=transport, **runtime_kwargs)
         t0 = time.monotonic()
         stats = rt.run(main, timeout=run_timeout)
-        if rank == 0:
+        if 0 in ranks:
             stats = dict(stats)
             stats["run_seconds"] = time.monotonic() - t0
             result_q.put(("ok", stats))
     except BaseException as e:  # noqa: BLE001 - report, then non-zero exit
         try:
-            result_q.put(("err", rank, f"{type(e).__name__}: {e}"))
+            result_q.put(("err", ranks[0], f"{type(e).__name__}: {e}"))
         except Exception:
             pass
         raise SystemExit(1)
 
 
 class ProcessGroup:
-    """A set of spawned rank processes sharing one SocketTransport world."""
+    """A set of spawned rank processes sharing one SocketTransport world.
+
+    ``n_procs`` (or an explicit ``placement``: a partition of
+    ``range(n_ranks)`` into per-process rank tuples) places several ranks
+    in one OS process; default is one rank per process."""
 
     #: ProcessGroup kwargs forwarded to the SocketTransport (via bootstrap)
     #: rather than to the Runtime
@@ -108,57 +144,79 @@ class ProcessGroup:
                 "max_batch_bytes")
 
     def __init__(self, n_ranks: int, main: MainSpec, *,
+                 n_procs: Optional[int] = None,
+                 placement: Optional[Sequence[Sequence[int]]] = None,
                  run_timeout: float = 120.0,
                  host: str = "127.0.0.1",
                  **kwargs: Any):
         self.n_ranks = n_ranks
         self.main = main
         self.run_timeout = run_timeout
+        if placement is not None:
+            self.placement = [tuple(sorted(int(r) for r in rs))
+                              for rs in placement]
+        else:
+            self.placement = default_placement(n_ranks, n_procs or n_ranks)
+        covered = sorted(r for rs in self.placement for r in rs)
+        assert covered == list(range(n_ranks)), \
+            f"placement {self.placement} does not partition 0..{n_ranks-1}"
         self._net = {k: kwargs.pop(k) for k in list(kwargs)
                      if k in self.NET_KEYS}
         self._net.setdefault("hb_interval", 0.5)
         self._net.setdefault("hb_timeout", 5.0)
         self.runtime_kwargs = kwargs
         self._host = host
+        #: one process per placement entry, keyed by its lead rank
         self._procs: Dict[int, mp.process.BaseProcess] = {}
-        self._killed = set()
+        self._killed = set()        # ranks whose process we SIGKILLed
         self._q = None
 
+    def _proc_of(self, rank: int) -> Tuple[int, Tuple[int, ...]]:
+        for rs in self.placement:
+            if rank in rs:
+                return rs[0], rs
+        raise KeyError(rank)
+
     def start(self) -> "ProcessGroup":
+        import uuid
         ctx = mp.get_context("spawn")
         self._q = ctx.SimpleQueue()
         coord = (self._host, _free_port(self._host))
-        for r in range(self.n_ranks):
+        launch_id = uuid.uuid4().hex[:12]
+        for rs in self.placement:
             p = ctx.Process(
                 target=_child_entry,
-                args=(r, self.n_ranks, coord, self.main,
+                args=(rs, self.n_ranks, coord, self.main,
                       self.runtime_kwargs, self.run_timeout, self._net,
-                      self._q),
-                daemon=False, name=f"edat-rank{r}")
+                      self._q, launch_id),
+                daemon=False,
+                name="edat-ranks" + "_".join(str(r) for r in rs))
             p.start()
-            self._procs[r] = p
+            self._procs[rs[0]] = p
         return self
 
     def kill(self, rank: int) -> None:
-        """SIGKILL a rank's process — the cross-process equivalent of
-        ``Runtime.kill_rank``; survivors' heartbeat detectors raise
-        RANK_FAILED."""
-        self._killed.add(rank)
-        self._procs[rank].kill()
+        """SIGKILL the process hosting ``rank`` — the cross-process
+        equivalent of ``Runtime.kill_rank``, at process granularity: every
+        co-located rank dies with it, and survivors' heartbeat detectors
+        raise one RANK_FAILED per lost rank."""
+        lead, rs = self._proc_of(rank)
+        self._killed.update(rs)
+        self._procs[lead].kill()
 
     def wait(self, timeout: Optional[float] = None,
              check: bool = True) -> Dict[str, Any]:
-        """Join all ranks; return rank 0's stats.  Stragglers past the
+        """Join all processes; return rank 0's stats.  Stragglers past the
         deadline are killed (tests must fail fast, not hang).  With
         ``check``, any unexpected child failure raises ``RuntimeError``
-        (deliberately ``kill()``-ed ranks are expected to die)."""
+        (deliberately ``kill()``-ed processes are expected to die)."""
         deadline = time.monotonic() + (
             timeout if timeout is not None else self.run_timeout + 30.0)
         hung = []
-        for r, p in self._procs.items():
+        for lead, p in self._procs.items():
             p.join(max(0.0, deadline - time.monotonic()))
             if p.is_alive():
-                hung.append(r)
+                hung.append(lead)
                 p.kill()
                 p.join(5.0)
         results = []
@@ -168,35 +226,43 @@ class ProcessGroup:
         if check:
             if hung:
                 raise RuntimeError(
-                    f"ranks {hung} did not exit within the deadline; "
-                    f"killed.  child reports: {results}")
+                    f"process(es) led by ranks {hung} did not exit within "
+                    f"the deadline; killed.  child reports: {results}")
             errs = [x for x in results if x[0] == "err"
                     and x[1] not in self._killed]
-            bad = [r for r, p in self._procs.items()
-                   if p.exitcode not in (0, None) and r not in self._killed]
+            bad = [lead for lead, p in self._procs.items()
+                   if p.exitcode not in (0, None)
+                   and lead not in self._killed]
             if errs or bad:
                 raise RuntimeError(
                     f"rank process(es) failed: exitcodes="
-                    f"{ {r: p.exitcode for r, p in self._procs.items()} } "
-                    f"reports={results}")
+                    f"{self.exitcodes()} reports={results}")
         return stats if stats is not None else {}
 
     def exitcodes(self) -> Dict[int, Optional[int]]:
-        return {r: p.exitcode for r, p in self._procs.items()}
+        """Exit code per *rank* (co-located ranks share their process's)."""
+        out = {}
+        for rs in self.placement:
+            code = self._procs[rs[0]].exitcode
+            for r in rs:
+                out[r] = code
+        return out
 
 
 def launch_processes(n_ranks: int, main: MainSpec, *,
                      timeout: float = 120.0, join_timeout: float = None,
                      check: bool = True,
                      **kwargs: Any) -> Dict[str, Any]:
-    """Spawn ``n_ranks`` OS processes running ``main`` SPMD over
-    SocketTransport; block until they all exit and return rank 0's stats
-    (including ``run_seconds``, the in-child wall time of ``Runtime.run``).
-    Extra kwargs go to :class:`ProcessGroup`: transport knobs
-    (``hb_interval``, ``hb_timeout``, ``coalesce``, ``flush_interval``,
-    ``max_batch_bytes``) reach the :class:`~repro.net.SocketTransport`;
-    everything else reaches the ``Runtime`` (e.g. ``workers_per_rank``,
-    ``progress``, ``unconsumed``)."""
+    """Spawn rank processes running ``main`` SPMD over SocketTransport;
+    block until they all exit and return rank 0's stats (including
+    ``run_seconds``, the in-child wall time of ``Runtime.run``).  By
+    default each rank gets its own process; ``n_procs=k`` packs the ranks
+    into ``k`` processes (``placement`` for full control).  Extra kwargs
+    go to :class:`ProcessGroup`: transport knobs (``hb_interval``,
+    ``hb_timeout``, ``coalesce``, ``flush_interval``, ``max_batch_bytes``)
+    reach the :class:`~repro.net.SocketTransport`; everything else reaches
+    the ``Runtime`` (e.g. ``workers_per_rank``, ``progress``,
+    ``unconsumed``)."""
     pg = ProcessGroup(n_ranks, main, run_timeout=timeout, **kwargs)
     pg.start()
     return pg.wait(join_timeout, check=check)
@@ -210,6 +276,10 @@ def _cli(argv=None) -> int:
     ap.add_argument("spec", help="module.path:fn or path/to/file.py:fn "
                                  "(fn defaults to 'main')")
     ap.add_argument("-n", "--ranks", type=int, default=2)
+    ap.add_argument("--procs", type=int, default=None,
+                    help="number of OS processes to pack the ranks into "
+                         "(default: one per rank); co-located ranks "
+                         "exchange events without touching a socket")
     ap.add_argument("--workers", type=int, default=1,
                     help="workers per rank (default 1)")
     ap.add_argument("--progress", choices=("thread", "worker"),
@@ -229,7 +299,7 @@ def _cli(argv=None) -> int:
     args = ap.parse_args(argv)
     _resolve_spec(args.spec)  # fail fast in the parent on a bad spec
     stats = launch_processes(
-        args.ranks, args.spec, timeout=args.timeout,
+        args.ranks, args.spec, timeout=args.timeout, n_procs=args.procs,
         workers_per_rank=args.workers, progress=args.progress,
         unconsumed=args.unconsumed, coalesce=not args.no_coalesce,
         flush_interval=args.flush_interval,

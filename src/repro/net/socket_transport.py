@@ -3,21 +3,32 @@
 Implements the full :class:`~repro.core.transport.Transport` contract over
 stream sockets with length-prefixed pickled frames (:mod:`repro.net.frames`):
 
-* **FIFO** — one connection per unordered rank pair, written by exactly one
-  writer (the per-peer writer thread when coalescing, a per-connection lock
-  otherwise) and read by one reader thread per peer, so per-(src,dst)
-  delivery order is exactly TCP byte order.  Self-sends take a
-  lock-free-ish loopback straight into the local inbox.
+* **Placement** — one transport instance serves *all* the ranks of one OS
+  process (``local_ranks``); ``placement`` maps every process (identified
+  by its lowest hosted rank, the *lead*) to the ranks it hosts.  There is
+  exactly **one TCP connection per unordered process pair** — co-located
+  ranks share it — and events between co-located ranks never touch a
+  socket at all: they take the loopback path straight into the
+  destination rank's inbox (verified by the ``wire_*`` counters below).
+  The default placement (no ``local_ranks``/``placement``) is the classic
+  one-rank-per-process world, fully backward compatible.
+* **FIFO** — each process-pair connection is written by exactly one
+  writer (the per-process writer thread when coalescing, a per-connection
+  lock otherwise) and read by one reader thread, so per-(src,dst)
+  delivery order is exactly TCP byte order.  Loopback sends append
+  atomically per destination inbox.
 * **Coalescing** — the default fast path: ``send``/``send_many`` only
-  *enqueue* onto a per-peer send queue; a per-peer writer thread drains the
-  queue and packs many events into **one batch frame per syscall**
-  (:func:`frames.encode_batch`, vectored ``sendmsg``).  While the writer is
-  inside a syscall new sends pile up behind it, so batch size adapts to
-  load with no added latency.  Knobs: ``flush_interval`` (wait this long
-  after the first queued message for a batch to accumulate; default 0 —
-  purely opportunistic batching) and ``max_batch_bytes`` (approximate cap
-  on one encoded batch; larger queues split into multiple frames).
-  ``coalesce=False`` restores the synchronous one-frame-per-send path.
+  *enqueue* onto a per-process send queue; a per-process writer thread
+  drains the queue and packs many events into **one batch frame per
+  syscall** (:func:`frames.encode_batch`, vectored ``sendmsg``) — events
+  for different co-located destination ranks share batch frames.  While
+  the writer is inside a syscall new sends pile up behind it, so batch
+  size adapts to load with no added latency.  Knobs: ``flush_interval``
+  (wait this long after the first queued message for a batch to
+  accumulate; default 0 — purely opportunistic batching) and
+  ``max_batch_bytes`` (approximate cap on one encoded batch; larger
+  queues split into multiple frames).  ``coalesce=False`` restores the
+  synchronous one-frame-per-send path.
 * **Snapshots vs zero-copy** — fire-and-forget requires the payload to be
   snapshotted at fire time.  Ordinary messages are therefore batch-encoded
   *in-band, synchronously inside send* (the pickle is the snapshot; the
@@ -26,19 +37,25 @@ stream sockets with length-prefixed pickled frames (:mod:`repro.net.frames`):
   fires — the paper's ``EDAT_ADDRESS``) skip the fire-time pickle
   entirely: the writer thread encodes them with pickle protocol-5
   out-of-band buffers, so numpy payloads (BFS frontiers, MONC field
-  slices) go from the firing task's buffer to the socket **zero-copy**.
+  slices, gradient trees) go from the firing task's buffer to the socket
+  **zero-copy**.
 * **Notification** — ``set_notify`` wakes an idle worker on arrival
-  (worker-progress mode), exactly like the in-proc transport.
-* **Failure detection** — every connection carries heartbeats; a peer that
-  goes silent past ``hb_timeout`` (or whose connection breaks without a
-  clean BYE) is declared dead and reported through ``on_peer_dead``, which
-  the runtime wires to its ``RANK_FAILED`` machinery.  Sends to dead peers
-  are dropped and counted, mirroring ``InProcTransport``.
+  (worker-progress mode), exactly like the in-proc transport, per rank.
+* **Failure detection** — every connection carries heartbeats; a peer
+  process that goes silent past ``hb_timeout`` (or whose connection breaks
+  without a clean BYE) is declared dead **with every rank it hosts**:
+  ``on_peer_dead`` fires once per hosted rank, which the runtime wires to
+  its ``RANK_FAILED`` machinery — survivors see one failure event per
+  lost rank, exactly like ``kill_rank``.  Sends to dead ranks are dropped
+  and counted, mirroring ``InProcTransport``.
 * **Termination accounting** — per-peer ``sent_to``/``recv_from`` vectors
   (user events only; sent counts at *enqueue*, before the wire write, and
   received counts when a message is *popped* for delivery, so queued and
   in-flight events always read as in-flight).  The Mattern detector
-  balances these across processes, restricted to alive ranks.
+  balances these across processes, restricted to alive ranks.  The
+  parallel ``wire_sent_to``/``wire_recv_from`` vectors count only events
+  that crossed (or will cross) a socket — co-located traffic never shows
+  up there, which the placement tests assert.
 
 Payloads must be picklable; :meth:`validate_payload` enforces this at
 ``ctx.fire()`` time so the error surfaces in the firing task.
@@ -54,7 +71,7 @@ import socket
 import threading
 import time
 from collections import deque
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -76,46 +93,78 @@ _IMMUTABLE = frozenset((type(None), bool, int, float, complex, str, bytes))
 
 
 class SocketTransport(Transport):
-    """Point-to-point transport for one local rank over per-peer sockets."""
+    """Transport for one process's ranks over per-process-pair sockets."""
 
     distributed = True
     serializes = True
 
     def __init__(self, rank: int, n_ranks: int,
                  peers: Dict[int, socket.socket], *,
+                 local_ranks: Optional[Sequence[int]] = None,
+                 placement: Optional[Dict[int, Sequence[int]]] = None,
                  hb_interval: float = 0.5, hb_timeout: float = 5.0,
                  coalesce: bool = True, flush_interval: float = 0.0,
                  max_batch_bytes: int = 1 << 20):
-        assert set(peers) == set(range(n_ranks)) - {rank}, \
-            f"rank {rank}/{n_ranks}: need a socket per peer, got {set(peers)}"
-        self.rank = rank
+        local = tuple(sorted(set(local_ranks))) if local_ranks else (rank,)
+        assert rank in local, f"rank {rank} not in local_ranks {local}"
+        if placement is None:
+            placement = {local[0]: local}
+            placement.update({r: (r,) for r in range(n_ranks)
+                              if r not in local})
+        self.placement: Dict[int, Tuple[int, ...]] = {
+            int(l): tuple(sorted(int(r) for r in rs))
+            for l, rs in placement.items()}
+        covered = sorted(r for rs in self.placement.values() for r in rs)
+        assert covered == list(range(n_ranks)), \
+            f"placement {self.placement} does not partition 0..{n_ranks - 1}"
+        assert all(l == rs[0] for l, rs in self.placement.items()), \
+            "each process must be keyed by its lowest (lead) rank"
+        assert self.placement[local[0]] == local
+        self.rank = local[0]          # lead local rank
         self.n_ranks = n_ranks
-        self.local_ranks = (rank,)
+        self.local_ranks = local
+        self._proc_of = {r: l for l, rs in self.placement.items()
+                         for r in rs}
+        remote = set(self.placement) - {self.rank}
+        assert set(peers) == remote, \
+            (f"process {self.rank}{local}: need one socket per peer "
+             f"process {sorted(remote)}, got {sorted(peers)}")
         self._peers = peers
         self._send_mu = {p: threading.Lock() for p in peers}
-        self._inbox: deque = deque()
-        self._cv = threading.Condition()
-        self._notify: Optional[Callable[[], None]] = None
-        #: callback(rank) invoked (outside locks) when a peer is declared
-        #: dead by the heartbeat/EOF detector; set by the Runtime
+        #: per-local-rank inboxes (pull mode) and their condition variables
+        self._inbox: Dict[int, deque] = {r: deque() for r in local}
+        self._cv = {r: threading.Condition() for r in local}
+        self._notify: Dict[int, Optional[Callable[[], None]]] = \
+            {r: None for r in local}
+        #: callback(rank) invoked (outside locks) when a peer rank is
+        #: declared dead by the heartbeat/EOF detector — once per rank the
+        #: failed process hosted; set by the Runtime
         self.on_peer_dead: Optional[Callable[[int], None]] = None
         #: push-mode delivery: when the runtime registers this callback the
         #: reader threads hand message batches straight to it, skipping the
         #: inbox and the progress-thread wakeup hop (one fewer context
-        #: switch per message on the latency path)
+        #: switch per message on the latency path).  Batches may mix
+        #: destination ranks; the runtime routes by ``Message.dst``.
         self._deliver: Optional[Callable[[List[Message]], None]] = None
+        self._dmu = threading.Lock()   # guards the _deliver handover
 
         self._mu = threading.Lock()
         self._dead = [False] * n_ranks
-        self._bye = set()          # peers that closed cleanly
+        self._sock_dead = {p: False for p in peers}  # per peer process
+        self._bye = set()          # peer processes that closed cleanly
         self._dropped = 0
         self._sent_to = [0] * n_ranks     # user events enqueued per dst
         self._recv_from = [0] * n_ranks   # user events popped per src
+        #: socket-only counterparts: co-located (loopback) traffic never
+        #: appears here — the placement tests assert exactly that
+        self._wire_sent_to = [0] * n_ranks
+        self._wire_recv_from = [0] * n_ranks
         self._last_seen = {p: time.monotonic() for p in peers}
         self._closing = False
         self._close_started = False
 
-        # writer-side coalescing state (one queue + writer thread per peer)
+        # writer-side coalescing state (one queue + writer thread per peer
+        # process — co-located destinations share batch frames)
         self.coalesce = bool(coalesce)
         self.flush_interval = flush_interval
         self.max_batch_bytes = int(max_batch_bytes)
@@ -128,29 +177,77 @@ class SocketTransport(Transport):
         self._threads: List[threading.Thread] = []
         for p in peers:
             t = threading.Thread(target=self._reader, args=(p,), daemon=True,
-                                 name=f"edat-net-r{rank}<{p}")
+                                 name=f"edat-net-r{self.rank}<{p}")
             self._threads.append(t)
             t.start()
         if self.coalesce:
             for p in peers:
                 t = threading.Thread(target=self._writer, args=(p,),
                                      daemon=True,
-                                     name=f"edat-net-w{rank}>{p}")
+                                     name=f"edat-net-w{self.rank}>{p}")
                 self._threads.append(t)
                 t.start()
         self._hb_stop = threading.Event()
-        if hb_interval > 0:
+        if hb_interval > 0 and peers:
             t = threading.Thread(target=self._heartbeat_loop, daemon=True,
-                                 name=f"edat-net-hb{rank}")
+                                 name=f"edat-net-hb{self.rank}")
             self._threads.append(t)
             t.start()
 
+    # ------------------------------------------------------- local delivery
+    def _deliver_local(self, msgs: List[Message], *,
+                       from_wire: bool = False) -> None:
+        """Hand ``msgs`` (any mix of local destination ranks) to push-mode
+        delivery or the per-rank inboxes.  Messages for a locally-dead
+        destination are dropped (their events die with the rank)."""
+        live: List[Message] = []
+        n_dead = 0
+        for m in msgs:
+            if m.dst in self._inbox and not self._dead[m.dst]:
+                live.append(m)
+            elif m.kind == EVENT:
+                n_dead += 1
+        if n_dead:
+            with self._mu:
+                self._dropped += n_dead
+        if not live:
+            return
+        if from_wire:
+            with self._mu:
+                for m in live:
+                    if m.kind == EVENT:
+                        self._wire_recv_from[m.src] += 1
+        with self._dmu:
+            push = self._deliver
+            if push is None:
+                by_dst: Dict[int, List[Message]] = {}
+                for m in live:
+                    by_dst.setdefault(m.dst, []).append(m)
+                for r, ms in by_dst.items():
+                    with self._cv[r]:
+                        self._inbox[r].extend(ms)
+                        self._cv[r].notify()
+        if push is not None:
+            # deliver BEFORE counting: recv_from must never include an
+            # event the scheduler has not seen, or the detector could
+            # observe balanced counters + idle schedulers while the event
+            # sits on a descheduled reader (rcv < sent in the gap is the
+            # safe direction — it only delays a poll)
+            push(live)
+            self._count_popped(live)
+        else:
+            for r in {m.dst for m in live}:
+                hook = self._notify.get(r)
+                if hook is not None:
+                    hook()  # outside inbox locks (may take sched locks)
+
     # ---------------------------------------------------------- reader side
     def _reader(self, peer: int) -> None:
-        """Per-peer reader: one blocking ``recv`` per burst, then decode
-        *every* complete frame already buffered and hand the whole run of
-        messages to the scheduler in one delivery — the receive-side
-        mirror of the writer's coalescing."""
+        """Per-peer-process reader: one blocking ``recv`` per burst, then
+        decode *every* complete frame already buffered and hand the whole
+        run of messages (any mix of co-located destination ranks) to the
+        scheduler in one delivery — the receive-side mirror of the
+        writer's coalescing."""
         sock = self._peers[peer]
         buf = bytearray()
         while True:
@@ -179,28 +276,12 @@ class SocketTransport(Transport):
                     # keep reading until EOF so late frames cannot be lost
                 # HEARTBEAT: nothing beyond the last_seen update above
             if msgs:
-                with self._cv:
-                    push = self._deliver
-                    if push is None:
-                        self._inbox.extend(msgs)
-                        self._cv.notify()
-                if push is not None:
-                    # deliver BEFORE counting: recv_from must never include
-                    # an event the scheduler has not seen, or the detector
-                    # could observe balanced counters + idle schedulers while
-                    # the event sits on a descheduled reader (rcv < sent in
-                    # the gap is the safe direction — it only delays a poll)
-                    push(msgs)
-                    self._count_popped(msgs)
-                else:
-                    hook = self._notify
-                    if hook is not None:
-                        hook()  # outside the inbox lock (may take sched locks)
+                self._deliver_local(msgs, from_wire=True)
             if eof or corrupt:
                 with self._mu:
                     clean = self._closing
                 if not clean:
-                    self._declare_dead(peer)  # silent if the peer said BYE
+                    self._declare_proc_dead(peer)  # silent after a BYE
                 return
 
     def _heartbeat_loop(self) -> None:
@@ -209,11 +290,11 @@ class SocketTransport(Transport):
             now = time.monotonic()
             for p in list(self._peers):
                 with self._mu:
-                    if self._dead[p] or p in self._bye or self._closing:
+                    if self._sock_dead[p] or p in self._bye or self._closing:
                         continue
                     stale = now - self._last_seen[p] > self._hb_timeout
                 if stale:
-                    self._declare_dead(p)
+                    self._declare_proc_dead(p)
                     continue
                 if self.coalesce:
                     self._enqueue(p, [("enc", [beat], 0)])
@@ -222,7 +303,7 @@ class SocketTransport(Transport):
                     with self._send_mu[p]:
                         self._peers[p].sendall(beat)
                 except OSError:
-                    self._declare_dead(p)
+                    self._declare_proc_dead(p)
 
     @staticmethod
     def _teardown(sock: socket.socket) -> None:
@@ -237,31 +318,38 @@ class SocketTransport(Transport):
         except OSError:
             pass
 
-    def _declare_dead(self, peer: int) -> None:
-        """Failure detector verdict: mark dead, close, notify the runtime.
-        A peer that already said BYE is marked dead *silently* — a broken
-        connection after a clean goodbye is shutdown skew, not a failure."""
+    def _declare_proc_dead(self, peer: int) -> None:
+        """Failure detector verdict on a peer *process*: mark every rank it
+        hosts dead, close the connection, notify the runtime once per lost
+        rank.  A process that already said BYE is marked dead *silently* —
+        a broken connection after a clean goodbye is shutdown skew, not a
+        failure."""
         with self._mu:
-            if self._dead[peer] or self._closing:
+            if self._sock_dead[peer] or self._closing:
                 return
-            self._dead[peer] = True
+            self._sock_dead[peer] = True
             was_clean = peer in self._bye
+            newly = [r for r in self.placement[peer] if not self._dead[r]]
+            for r in newly:
+                self._dead[r] = True
         self._teardown(self._peers[peer])
-        self._drop_queue(peer)  # queued-but-unwritten sends die with the peer
-        self.wake(self.rank)  # a blocked recv should re-check the world
+        self._drop_queue(peer)  # queued-but-unwritten sends die with it
+        for r in self.local_ranks:
+            self.wake(r)  # a blocked recv should re-check the world
         cb = self.on_peer_dead
         if cb is not None and not was_clean:
-            cb(peer)
+            for r in newly:
+                cb(r)
 
     # ----------------------------------------------------- coalescing writer
-    def _enqueue(self, dst: int, items: List) -> None:
-        """Append items to ``dst``'s send queue in one lock round-trip.
-        Items are either a :class:`Message` (owned payload; the writer
-        encodes it late with out-of-band buffers) or ``("enc", pieces,
-        n_events)`` (a pre-encoded snapshot frame)."""
-        cv = self._sendcv[dst]
+    def _enqueue(self, proc: int, items: List) -> None:
+        """Append items to peer process ``proc``'s send queue in one lock
+        round-trip.  Items are either a :class:`Message` (owned payload;
+        the writer encodes it late with out-of-band buffers) or ``("enc",
+        pieces, n_events)`` (a pre-encoded snapshot frame)."""
+        cv = self._sendcv[proc]
         with cv:
-            self._sendq[dst].extend(items)
+            self._sendq[proc].extend(items)
             cv.notify_all()
 
     def _count_items_dropped(self, items) -> None:
@@ -276,14 +364,14 @@ class SocketTransport(Transport):
             with self._mu:
                 self._dropped += n
 
-    def _drop_queue(self, peer: int) -> None:
-        """Discard ``peer``'s queued sends, counting user events dropped."""
-        cv = self._sendcv.get(peer)
+    def _drop_queue(self, proc: int) -> None:
+        """Discard ``proc``'s queued sends, counting user events dropped."""
+        cv = self._sendcv.get(proc)
         if cv is None:
             return
         with cv:
-            items = list(self._sendq[peer])
-            self._sendq[peer].clear()
+            items = list(self._sendq[proc])
+            self._sendq[proc].clear()
             cv.notify_all()
         self._count_items_dropped(items)
 
@@ -303,16 +391,17 @@ class SocketTransport(Transport):
         return n
 
     def _writer(self, peer: int) -> None:
-        """Per-peer writer thread: drain the send queue, pack runs of owned
-        messages into batch frames (protocol-5 out-of-band buffers), and
-        push everything to the kernel with one vectored send."""
+        """Per-peer-process writer thread: drain the send queue, pack runs
+        of owned messages into batch frames (protocol-5 out-of-band
+        buffers), and push everything to the kernel with one vectored
+        send."""
         sock = self._peers[peer]
         q = self._sendq[peer]
         cv = self._sendcv[peer]
         while True:
             with cv:
                 while not q:
-                    if self._dead[peer] or self._closing:
+                    if self._sock_dead[peer] or self._closing:
                         return
                     cv.wait()
                 if self.flush_interval > 0:
@@ -320,7 +409,7 @@ class SocketTransport(Transport):
                     # on a deadline — every enqueue notifies the condvar,
                     # so a single timed wait would return after one message
                     end = time.monotonic() + self.flush_interval
-                    while not self._dead[peer] and not self._closing:
+                    while not self._sock_dead[peer] and not self._closing:
                         left = end - time.monotonic()
                         if left <= 0:
                             break
@@ -329,7 +418,7 @@ class SocketTransport(Transport):
                 q.clear()
                 self._wbusy[peer] = True
             try:
-                if self._dead[peer]:
+                if self._sock_dead[peer]:
                     # popped concurrently with the death verdict:
                     # _drop_queue saw an empty queue, so count these here
                     self._count_items_dropped(items)
@@ -340,7 +429,7 @@ class SocketTransport(Transport):
                     with self._mu:
                         closing = self._closing
                     if not closing:
-                        self._declare_dead(peer)
+                        self._declare_proc_dead(peer)
                     # like the synchronous path, the whole failed write
                     # counts as dropped (some bytes may have made it out,
                     # but the peer is gone either way)
@@ -415,9 +504,9 @@ class SocketTransport(Transport):
                     sent = 0
 
     def flush(self, timeout: Optional[float] = 5.0) -> bool:
-        """Block until every peer's send queue has drained to the kernel
-        (or ``timeout`` expires).  Returns True when fully flushed.  Only
-        meaningful with coalescing; a no-op (True) otherwise."""
+        """Block until every peer process's send queue has drained to the
+        kernel (or ``timeout`` expires).  Returns True when fully flushed.
+        Only meaningful with coalescing; a no-op (True) otherwise."""
         if not self.coalesce:
             return True
         deadline = time.monotonic() + (timeout if timeout is not None
@@ -426,7 +515,7 @@ class SocketTransport(Transport):
         for p, cv in self._sendcv.items():
             with cv:
                 while ((self._sendq[p] or self._wbusy[p])
-                       and not self._dead[p]):
+                       and not self._sock_dead[p]):
                     left = deadline - time.monotonic()
                     if left <= 0:
                         ok = False
@@ -504,116 +593,135 @@ class SocketTransport(Transport):
     def set_deliver(self, fn: Callable[[List[Message]], None]) -> None:
         """Enable push-mode delivery (used by the Runtime): the reader
         threads call ``fn(batch)`` directly instead of queueing into the
-        inbox.  Messages that arrived before registration are flushed to
-        ``fn`` under the inbox lock, so per-(src,dst) FIFO order survives
-        the handover."""
-        with self._cv:
-            backlog = list(self._inbox)
-            self._inbox.clear()
+        per-rank inboxes.  Batches may mix co-located destination ranks;
+        the runtime routes by ``Message.dst``.  Messages that arrived
+        before registration are flushed to ``fn`` under the handover lock,
+        so per-(src,dst) FIFO order survives the handover."""
+        with self._dmu:
+            backlog: List[Message] = []
+            for r in self.local_ranks:
+                with self._cv[r]:
+                    backlog.extend(self._inbox[r])
+                    self._inbox[r].clear()
             if backlog:
                 fn(backlog)  # deliver-then-count, as in the reader path
                 self._count_popped(backlog)
             self._deliver = fn
 
     def _loopback(self, msgs: List[Message]) -> None:
+        """Co-located delivery: no socket, no serialisation — events go
+        straight to the destination rank's inbox / push delivery."""
         with self._mu:
             for m in msgs:
                 if m.kind == EVENT:
-                    self._sent_to[self.rank] += 1
-        with self._cv:
-            push = self._deliver
-            if push is None:
-                self._inbox.extend(msgs)
-                self._cv.notify()
-        if push is not None:
-            push(msgs)  # deliver-then-count, as in the reader path
-            self._count_popped(msgs)
-            return
-        hook = self._notify
-        if hook is not None:
-            hook()
+                    self._sent_to[m.dst] += 1
+        self._deliver_local(msgs)
+
+    def _queue_remote(self, proc: int, ms: List[Message]) -> None:
+        """Coalescing enqueue of ``ms`` (same destination process) with
+        the snapshot/late-encode split applied per message run."""
+        items: List = []
+        snap: List[Message] = []
+        snap_ev = 0
+        for m in ms:
+            if self._late_encodable(m):
+                if snap:
+                    items.append(("enc", self._encode_snapshot(snap),
+                                  snap_ev))
+                    snap, snap_ev = [], 0
+                items.append(m)
+            else:
+                snap.append(m)
+                snap_ev += 1 if m.kind == EVENT else 0
+        if snap:
+            items.append(("enc", self._encode_snapshot(snap), snap_ev))
+        self._enqueue(proc, items)
 
     def send(self, msg: Message) -> bool:
-        if msg.dst == self.rank:
+        dst = msg.dst
+        if dst in self._inbox:            # co-located (including self)
+            if self._dead[dst]:
+                with self._mu:
+                    self._dropped += 1
+                return False
             self._loopback([msg])
             return True
-        if self._dead[msg.dst]:
+        if self._dead[dst]:
             with self._mu:
                 self._dropped += 1
             return False
+        proc = self._proc_of[dst]
         if self.coalesce:
             if msg.kind == EVENT:
                 with self._mu:
-                    self._sent_to[msg.dst] += 1
+                    self._sent_to[dst] += 1
+                    self._wire_sent_to[dst] += 1
             if self._late_encodable(msg):
-                self._enqueue(msg.dst, [msg])
+                self._enqueue(proc, [msg])
             else:
-                self._enqueue(msg.dst, [("enc", self._encode_snapshot([msg]),
-                                         1 if msg.kind == EVENT else 0)])
+                self._enqueue(proc, [("enc", self._encode_snapshot([msg]),
+                                     1 if msg.kind == EVENT else 0)])
             return True
         data = self._encode_msg(msg)
         try:
-            with self._send_mu[msg.dst]:
-                self._peers[msg.dst].sendall(data)
+            with self._send_mu[proc]:
+                self._peers[proc].sendall(data)
         except OSError:
-            self._declare_dead(msg.dst)
+            self._declare_proc_dead(proc)
             with self._mu:
                 self._dropped += 1
             return False
         if msg.kind == EVENT:
             with self._mu:
-                self._sent_to[msg.dst] += 1
+                self._sent_to[dst] += 1
+                self._wire_sent_to[dst] += 1
         return True
 
     def send_many(self, msgs: List[Message]) -> int:
-        by_dst: Dict[int, List[Message]] = {}
+        local: Dict[int, List[Message]] = {}
+        remote: Dict[int, List[Message]] = {}   # peer process -> messages
+        n_dead = 0
         for m in msgs:
-            by_dst.setdefault(m.dst, []).append(m)
+            if m.dst in self._inbox:
+                if self._dead[m.dst]:
+                    n_dead += 1
+                else:
+                    local.setdefault(m.dst, []).append(m)
+            elif self._dead[m.dst]:
+                n_dead += 1
+            else:
+                remote.setdefault(self._proc_of[m.dst], []).append(m)
+        if n_dead:
+            with self._mu:
+                self._dropped += n_dead
         delivered = 0
-        for dst, ms in by_dst.items():
-            if dst == self.rank:
-                self._loopback(ms)
-                delivered += len(ms)
-                continue
-            if self._dead[dst]:
-                with self._mu:
-                    self._dropped += len(ms)
-                continue
+        for dst, ms in local.items():
+            self._loopback(ms)
+            delivered += len(ms)
+        for proc, ms in remote.items():
             if self.coalesce:
-                n_ev = sum(1 for m in ms if m.kind == EVENT)
                 with self._mu:
-                    self._sent_to[dst] += n_ev
-                items: List = []
-                snap: List[Message] = []
-                snap_ev = 0
-                for m in ms:
-                    if self._late_encodable(m):
-                        if snap:
-                            items.append(("enc", self._encode_snapshot(snap),
-                                          snap_ev))
-                            snap, snap_ev = [], 0
-                        items.append(m)
-                    else:
-                        snap.append(m)
-                        snap_ev += 1 if m.kind == EVENT else 0
-                if snap:
-                    items.append(("enc", self._encode_snapshot(snap),
-                                  snap_ev))
-                self._enqueue(dst, items)
+                    for m in ms:
+                        if m.kind == EVENT:
+                            self._sent_to[m.dst] += 1
+                            self._wire_sent_to[m.dst] += 1
+                self._queue_remote(proc, ms)
                 delivered += len(ms)
                 continue
             blob = b"".join(self._encode_msg(m) for m in ms)
             try:
-                with self._send_mu[dst]:
-                    self._peers[dst].sendall(blob)
+                with self._send_mu[proc]:
+                    self._peers[proc].sendall(blob)
             except OSError:
-                self._declare_dead(dst)
+                self._declare_proc_dead(proc)
                 with self._mu:
                     self._dropped += len(ms)
                 continue
-            n_ev = sum(1 for m in ms if m.kind == EVENT)
             with self._mu:
-                self._sent_to[dst] += n_ev
+                for m in ms:
+                    if m.kind == EVENT:
+                        self._sent_to[m.dst] += 1
+                        self._wire_sent_to[m.dst] += 1
             delivered += len(ms)
         return delivered
 
@@ -628,48 +736,52 @@ class SocketTransport(Transport):
                     self._recv_from[m.src] += 1
 
     def recv(self, rank: int, timeout: Optional[float]) -> Optional[Message]:
-        assert rank == self.rank
-        with self._cv:
-            if not self._inbox:
-                self._cv.wait(timeout)
-            if not self._inbox:
+        assert rank in self._inbox
+        with self._cv[rank]:
+            if not self._inbox[rank]:
+                self._cv[rank].wait(timeout)
+            if not self._inbox[rank]:
                 return None
-            msg = self._inbox.popleft()
+            msg = self._inbox[rank].popleft()
         self._count_popped((msg,))
         return msg
 
     def recv_many(self, rank: int,
                   timeout: Optional[float]) -> List[Message]:
-        assert rank == self.rank
-        with self._cv:
-            if not self._inbox:
-                self._cv.wait(timeout)
-            out = list(self._inbox)
-            self._inbox.clear()
+        assert rank in self._inbox
+        with self._cv[rank]:
+            if not self._inbox[rank]:
+                self._cv[rank].wait(timeout)
+            out = list(self._inbox[rank])
+            self._inbox[rank].clear()
         self._count_popped(out)
         return out
 
     def drain(self, rank: int, max_n: Optional[int] = None) -> List[Message]:
-        assert rank == self.rank
-        with self._cv:
-            if not self._inbox:
+        assert rank in self._inbox
+        with self._cv[rank]:
+            box = self._inbox[rank]
+            if not box:
                 return []
-            if max_n is None or max_n >= len(self._inbox):
-                out = list(self._inbox)
-                self._inbox.clear()
+            if max_n is None or max_n >= len(box):
+                out = list(box)
+                box.clear()
             else:
-                out = [self._inbox.popleft() for _ in range(max_n)]
+                out = [box.popleft() for _ in range(max_n)]
         self._count_popped(out)
         return out
 
     def wake(self, rank: int) -> None:
-        with self._cv:
-            self._cv.notify_all()
+        cv = self._cv.get(rank)
+        if cv is None:
+            return
+        with cv:
+            cv.notify_all()
 
     def set_notify(self, rank: int,
                    fn: Optional[Callable[[], None]]) -> None:
-        assert rank == self.rank
-        self._notify = fn
+        assert rank in self._inbox
+        self._notify[rank] = fn
 
     # ------------------------------------------------------- failure / info
     def is_dead(self, rank: int) -> bool:
@@ -678,24 +790,41 @@ class SocketTransport(Transport):
     def mark_dead(self, rank: int) -> None:
         """Local failure injection (``kill_rank`` parity): stop sending to
         ``rank`` without invoking the peer-death callback — the caller is
-        responsible for its own RANK_FAILED notification."""
+        responsible for its own RANK_FAILED notification.  A remote
+        process's connection is only severed once *every* rank it hosts
+        has been marked dead (co-located survivors keep using it); a local
+        rank's inbox is cleared, its queued events counted as dropped."""
         with self._mu:
             if self._dead[rank]:
                 return
             self._dead[rank] = True
-        sock = self._peers.get(rank)
-        if sock is not None:
-            self._teardown(sock)  # plain close() would leave the reader's
-            # makefile fd alive and keep delivering the dead rank's events
-        self._drop_queue(rank)
+        if rank in self._inbox:
+            with self._cv[rank]:
+                n = sum(1 for m in self._inbox[rank] if m.kind == EVENT)
+                self._inbox[rank].clear()
+                self._cv[rank].notify_all()
+            if n:
+                with self._mu:
+                    self._dropped += n
+            return
+        proc = self._proc_of[rank]
+        with self._mu:
+            sever = (not self._sock_dead[proc]
+                     and all(self._dead[r] for r in self.placement[proc]))
+            if sever:
+                self._sock_dead[proc] = True
+        if sever:
+            self._teardown(self._peers[proc])  # plain close() would leave
+            # the reader's fd alive and keep delivering dead-rank events
+            self._drop_queue(proc)
 
     @property
     def dropped(self) -> int:
         return self._dropped
 
     def pending(self, rank: int) -> int:
-        with self._cv:
-            return len(self._inbox)
+        with self._cv[rank]:
+            return len(self._inbox[rank])
 
     def sent_vector(self) -> List[int]:
         with self._mu:
@@ -705,11 +834,22 @@ class SocketTransport(Transport):
         with self._mu:
             return list(self._recv_from)
 
+    def wire_sent_vector(self) -> List[int]:
+        """Per-destination count of user events that took a socket (the
+        co-located loopback path never increments this)."""
+        with self._mu:
+            return list(self._wire_sent_to)
+
+    def wire_recv_vector(self) -> List[int]:
+        """Per-source count of user events that arrived over a socket."""
+        with self._mu:
+            return list(self._wire_recv_from)
+
     # -------------------------------------------------------------- close
     def close(self) -> None:
-        """Clean shutdown: BYE every live peer (so their failure detectors
-        stay quiet), flush the write queues, close all sockets, release
-        blocked receivers."""
+        """Clean shutdown: BYE every live peer process (so their failure
+        detectors stay quiet), flush the write queues, close all sockets,
+        release blocked receivers."""
         with self._mu:
             if self._close_started:
                 return
@@ -720,12 +860,12 @@ class SocketTransport(Transport):
             # the BYE must take the same path as queued data so it is the
             # *last* frame on the wire; then wait for the writers to drain
             for p in self._peers:
-                if not self._dead[p]:
+                if not self._sock_dead[p]:
                     self._enqueue(p, [("enc", [bye], 0)])
             self.flush(timeout=1.0)
         else:
             for p, sock in self._peers.items():
-                if not self._dead[p]:
+                if not self._sock_dead[p]:
                     try:
                         with self._send_mu[p]:
                             sock.sendall(bye)
@@ -738,6 +878,7 @@ class SocketTransport(Transport):
                 cv.notify_all()  # writers observe _closing and exit
         for sock in self._peers.values():
             self._teardown(sock)  # readers unblock with EOF -> clean exit
-        self.wake(self.rank)
+        for r in self.local_ranks:
+            self.wake(r)
         for t in self._threads:
             t.join(0.5)

@@ -1,31 +1,53 @@
 """Event-driven distributed trainer: EDAT as the coordination layer.
 
-Every JAX host is an EDAT rank (simulated in-proc here; the transport is
-pluggable).  All inter-host interactions are events — the paper's model:
+Every JAX host is an EDAT rank.  The trainer *attaches* to any runtime via
+:meth:`EventDrivenTrainer.start` — the same code runs threads-as-ranks in
+one process (:meth:`EventDrivenTrainer.run`, the in-proc convenience) or
+SPMD across OS processes over ``repro.net.SocketTransport``
+(:func:`distributed_train`, which wraps ``edat.launch_processes``).  Each
+process hosts ``transport.local_ranks`` trainer ranks; co-located ranks
+exchange gradient events in-process (no socket frames), remote ranks over
+the coalescing socket transport.  All inter-rank interactions are events —
+the paper's model:
 
   * ``grad``    gradient exchange (data-parallel all-to-all of grad events;
-                optionally int8-compressed), collected by a quorum
-                collector: K-of-N with a straggler timeout — bounded-
-                staleness async DP; quorum=1.0 == synchronous DP.
+                optionally int8-compressed), collected by a
+                :class:`QuorumCollector`: K-of-N with a straggler timeout —
+                bounded-staleness async DP; quorum=1.0 == synchronous DP.
   * ``ckpt``    async checkpointing: the step task fires a snapshot event
-                to a persistent checkpoint task; the write happens on
-                another worker while the next step computes.
-  * ``metric``  in-situ analytics pipeline (MONC pattern, §VI).
-  * RANK_FAILED machine-generated failure event (paper §VII): the leader
-                broadcasts ``recover``; survivors roll back to the last
-                durable checkpoint, re-shard the data stream (elastic),
-                and continue.
+                to a persistent checkpoint task on rank 0; the write
+                happens on another worker while the next step computes.
+                ``ckpt_dir`` must be shared storage (all processes read it
+                during recovery — process memory dies with the rank).
+  * ``metric``  in-situ analytics pipeline (MONC pattern, §VI); history
+                accumulates on rank 0's process.
+  * ``final``   each rank ships its converged parameters to rank 0 on
+                completion (the cross-process replacement for reading
+                trainer state from shared memory).
+  * RANK_FAILED machine-generated failure event (paper §VII).  In-proc it
+                comes from ``Runtime.kill_rank``; across processes from
+                the socket transport's heartbeat/EOF detector — a
+                SIGKILLed process surfaces one RANK_FAILED per rank it
+                hosted.  The handler sweeps *every* transport-dead rank
+                out of the alive set in one go (so a multi-rank process
+                death triggers exactly one coordinated recovery), then the
+                leader broadcasts ``recover``: survivors roll back to the
+                last durable checkpoint, re-shard the data stream
+                (elastic), and continue.
 
 The trainer is deliberately pure data-parallel at the EDAT level; inside a
 rank the step is a jitted JAX function (which on a real pod is itself
-pjit-sharded — see launch/).
+pjit-sharded — see launch/).  The jitted functions are shared by all
+co-located rank threads of a process.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +75,8 @@ class TrainerCfg:
     # heartbeat failure detector (timer events, paper §VII): 0 = off.
     # A rank silent for hb_timeout is *suspected*: survivors treat it as
     # failed (roll back + re-shard); the suspect fences itself on waking.
+    # (Across processes the socket transport's own heartbeat detector
+    # additionally catches dead *processes* regardless of this knob.)
     hb_interval: float = 0.0
     hb_timeout: float = 3.0
     # test hook: {rank: (step, seconds)} injected stall
@@ -76,6 +100,85 @@ def _dq8_tree(tree):
                         and len(x) == 2 and isinstance(x[1], float))
 
 
+def flatten_params(tree) -> Dict[str, np.ndarray]:
+    """Flatten a parameter tree to ``{path: numpy array}`` — the on-disk
+    form of the distributed trainer's final parameters, and the common
+    currency for comparing trainers across transports."""
+    flat = ckpt_store.store._flatten(jax.tree.map(np.asarray, tree))
+    return {k.lstrip("/"): v for k, v in flat.items()}
+
+
+# ----------------------------------------------------------- quorum logic
+class QuorumCollector:
+    """K-of-N gradient quorum with bounded-staleness fold-in.
+
+    Pure accumulation logic, factored out of the step task so it can be
+    property-tested directly: ``offer`` payloads in *any* arrival order,
+    and :meth:`reduce` yields the weighted mean
+
+        (sum(fresh) + discount * sum(stale)) / (n_fresh + discount*n_stale)
+
+    independent of that order (fresh gradients fold in ascending rank
+    order, stale ones in ascending (step, rank) order, so the
+    floating-point result is deterministic).
+
+    * a payload from the collector's epoch at exactly ``step`` is *fresh*;
+    * an earlier step from the same epoch is *stale* (discounted fold-in,
+      the bounded-staleness rule);
+    * other epochs (pre-recovery leftovers) and future steps are ignored.
+    """
+
+    def __init__(self, *, step: int, epoch: int, need: int,
+                 stale_discount: float,
+                 unpack: Callable[[Any], Any] = lambda g: g):
+        self.step = step
+        self.epoch = epoch
+        self.need = need
+        self.stale_discount = stale_discount
+        self.unpack = unpack
+        self.got: Dict[int, Any] = {}
+        self.stale: List[tuple] = []    # (step, rank, grads)
+
+    def offer(self, payload: Dict[str, Any]) -> bool:
+        """Consider one grad-event payload; True iff it was accepted."""
+        if payload["epoch"] != self.epoch:
+            return False
+        if payload["step"] == self.step:
+            self.got[payload["rank"]] = self.unpack(payload["grads"])
+            return True
+        if payload["step"] < self.step:
+            self.stale.append((payload["step"], payload["rank"],
+                               self.unpack(payload["grads"])))
+            return True
+        return False
+
+    @property
+    def complete(self) -> bool:
+        return len(self.got) >= self.need
+
+    def ensure_own(self, rank: int, grads) -> None:
+        """Own grads must participate even if the loopback event lost a
+        race with the timeout (no-op when already collected)."""
+        self.got.setdefault(rank, grads)
+
+    def reduce(self):
+        """Weighted mean over fresh + discounted stale gradients.
+        Returns ``(gavg, n_fresh, n_stale)``; ``gavg`` leaves are jnp."""
+        gsum = None
+        weight = 0.0
+        for r in sorted(self.got):      # deterministic fold order
+            g = self.got[r]
+            gsum = g if gsum is None else jax.tree.map(np.add, gsum, g)
+            weight += 1.0
+        for _, _, g in sorted(self.stale,   # bounded staleness: discounted,
+                              key=lambda t: t[:2]):   # deterministic order
+            gsum = jax.tree.map(
+                lambda a, b: a + self.stale_discount * b, gsum, g)
+            weight += self.stale_discount
+        gavg = jax.tree.map(lambda x: jnp.asarray(x / weight), gsum)
+        return gavg, len(self.got), len(self.stale)
+
+
 class _RankState:
     def __init__(self, rank):
         self.rank = rank
@@ -94,6 +197,16 @@ class _RankState:
 
 
 class EventDrivenTrainer:
+    """Elastic data-parallel trainer coordinated purely by EDAT events.
+
+    One instance serves every rank of its process: :meth:`start` is the
+    SPMD attach point (called once per local rank by ``Runtime.run``),
+    :meth:`run` the in-proc convenience that owns a threads-as-ranks
+    runtime.  State that crosses ranks does so *only* via events — the
+    instance keeps per-rank state for the ranks it hosts, rank 0's
+    process additionally accumulating ``history`` (metric events),
+    ``final_params`` (final events) and ``recoveries``."""
+
     def __init__(self, model, data_cfg: DataCfg, opt_cfg: OptCfg,
                  cfg: TrainerCfg):
         self.model = model
@@ -105,8 +218,16 @@ class EventDrivenTrainer:
         self.states = [_RankState(r) for r in range(cfg.n_ranks)]
         self.runtime: Optional[edat.Runtime] = None
         self.ckpt_writes = 0
+        #: rollbacks executed by local ranks: {"rank", "step", "epoch"}
+        self.recoveries: List[Dict[str, int]] = []
+        #: rank -> final parameter tree, gathered on rank 0's process
+        self.final_params: Dict[int, Any] = {}
+        #: called (on rank 0's process) with each rank's final payload
+        self.on_final: Optional[Callable[[Dict[str, Any]], None]] = None
+        #: called (on rank 0's process) after each metric is recorded
+        self.on_metric: Optional[Callable[[Dict[str, Any]], None]] = None
 
-        # jitted per-host functions (shared across rank threads)
+        # jitted per-host functions (shared across co-located rank threads)
         def loss_fn(p, batch):
             loss, m = model.loss(p, batch)
             return loss, m
@@ -132,14 +253,17 @@ class EventDrivenTrainer:
 
     # ------------------------------------------------------------ main SPMD
     def run(self, timeout: float = 300.0) -> Dict[str, Any]:
+        """In-proc convenience: all ranks as threads in one Runtime."""
         cfg = self.cfg
         rt = edat.Runtime(cfg.n_ranks, workers_per_rank=cfg.workers_per_rank,
                           unconsumed="ignore")
         self.runtime = rt
-        rt.run(self._main, timeout=timeout)
+        rt.run(self.start, timeout=timeout)
         return {
             "history": sorted(self.history, key=lambda m: m["step"]),
             "final_params": [s.params for s in self.states],
+            "final_by_rank": dict(self.final_params),
+            "recoveries": list(self.recoveries),
             "stale_used": sum(s.stale_used for s in self.states),
             "timeouts": sum(s.timeouts for s in self.states),
             "ckpt_writes": self.ckpt_writes,
@@ -158,8 +282,14 @@ class EventDrivenTrainer:
             st.opt_state = jax.tree.map(jnp.asarray, tree["opt"])
             st.step = step
 
-    def _main(self, ctx: edat.Context):
+    def start(self, ctx: edat.Context) -> None:
+        """Attach one rank of the trainer to any (in-proc or distributed)
+        runtime: initialise that rank's replica, submit its persistent
+        tasks, and fire the first chain token.  Rank 0 (wherever its
+        process lives) additionally hosts the metric/checkpoint/final
+        collectors and the heartbeat monitor."""
         cfg = self.cfg
+        self.runtime = ctx._rt
         st = self.states[ctx.rank]
         self._init_state(st)
 
@@ -174,6 +304,8 @@ class EventDrivenTrainer:
         if ctx.rank == 0:
             ctx.submit_persistent(self._metric_task,
                                   deps=[(edat.ANY, "metric")], name="metrics")
+            ctx.submit_persistent(self._final_task,
+                                  deps=[(edat.ANY, "final")], name="final")
             if cfg.ckpt_dir:
                 ctx.submit_persistent(self._ckpt_task,
                                       deps=[(edat.SELF, "ckpt")], name="ckpt")
@@ -255,46 +387,33 @@ class EventDrivenTrainer:
 
         payload = {"rank": ctx.rank, "step": st.step, "epoch": epoch,
                    "grads": self._pack_grads(grads)}
-        ctx.fire(edat.ALL, "grad", payload)
+        # ref=True: the packed tree is freshly materialised and never
+        # mutated — co-located ranks share it in-process, remote ranks get
+        # the zero-copy out-of-band encode
+        ctx.fire(edat.ALL, "grad", payload, ref=True)
 
         # K-of-N quorum collection with straggler timeout (async DP)
-        need = max(1, int(np.ceil(cfg.quorum * len(alive))))
-        got: Dict[int, Any] = {}
-        stale: List[Any] = []
+        coll = QuorumCollector(
+            step=st.step, epoch=epoch,
+            need=max(1, int(np.ceil(cfg.quorum * len(alive)))),
+            stale_discount=cfg.stale_discount, unpack=self._unpack_grads)
         deadline = time.monotonic() + cfg.collect_timeout
-        while len(got) < need:
+        while not coll.complete:
             if st.epoch != epoch or st.done:
                 # recovery happened under us: abandon this step; the
                 # recovery's own chain token (re)starts the stepping
                 return False
             evs = ctx.retrieve_any([(edat.ANY, "grad")])
             for ev in evs:
-                p = ev.data
-                if p["epoch"] != epoch:
-                    continue
-                if p["step"] == st.step:
-                    got[p["rank"]] = self._unpack_grads(p["grads"])
-                elif p["step"] < st.step:
-                    stale.append(self._unpack_grads(p["grads"]))
+                coll.offer(ev.data)
             if not evs:
                 if time.monotonic() > deadline:
                     st.timeouts += 1
                     break
                 time.sleep(0.002)
-        if ctx.rank not in got:   # own grads must participate
-            got[ctx.rank] = jax.tree.map(np.asarray, grads)
-
-        gsum = None
-        weight = 0.0
-        for g in got.values():
-            gsum = g if gsum is None else jax.tree.map(np.add, gsum, g)
-            weight += 1.0
-        for g in stale:           # bounded staleness: discounted fold-in
-            gsum = jax.tree.map(
-                lambda a, b: a + cfg.stale_discount * b, gsum, g)
-            weight += cfg.stale_discount
-            st.stale_used += 1
-        gavg = jax.tree.map(lambda x: jnp.asarray(x / weight), gsum)
+        coll.ensure_own(ctx.rank, jax.tree.map(np.asarray, grads))
+        gavg, n_got, n_stale = coll.reduce()
+        st.stale_used += n_stale
 
         snap = None
         with st.mu:
@@ -315,12 +434,16 @@ class EventDrivenTrainer:
 
         ctx.fire(0, "metric", {"rank": ctx.rank, "step": step_now,
                                "loss": float(loss),
-                               "n_grads": len(got), "n_stale": len(stale)})
+                               "n_grads": n_got, "n_stale": n_stale})
         if snap is not None:
             ctx.fire(0, "ckpt", {"step": step_now, "snap": snap}, ref=True)
 
         if step_now < cfg.steps:
             return True
+        # trained to completion: ship the converged replica to rank 0
+        ctx.fire(0, "final",
+                 {"rank": ctx.rank, "step": step_now,
+                  "params": jax.tree.map(np.asarray, st.params)}, ref=True)
         if cfg.hb_interval > 0:
             ctx.fire(0, "__hbdone", ctx.rank)
         return False
@@ -333,6 +456,19 @@ class EventDrivenTrainer:
     def _metric_task(self, ctx: edat.Context, events):
         with self._hist_mu:
             self.history.append(events[0].data)
+        hook = self.on_metric
+        if hook is not None:
+            hook(events[0].data)
+
+    def _final_task(self, ctx: edat.Context, events):
+        """Rank 0: collect each rank's converged parameters (ranks that
+        die or get fenced never report — elastic by construction)."""
+        p = events[0].data
+        with self._hist_mu:
+            self.final_params[p["rank"]] = p["params"]
+        hook = self.on_final
+        if hook is not None:
+            hook(p)
 
     def _hb_pump(self, ctx: edat.Context, events):
         st = self.states[ctx.rank]
@@ -344,7 +480,9 @@ class EventDrivenTrainer:
 
     def _hb_monitor(self, ctx: edat.Context, events):
         """Timer-driven failure detector on rank 0 (paper §VII: machine
-        generated events drive tasks)."""
+        generated events drive tasks).  Reads only rank-0-local state plus
+        delivered hb/__hbdone events — it never peeks at other ranks'
+        memory, so it works unchanged across processes."""
         cfg = self.cfg
         st = self.states[ctx.rank]
         now = time.monotonic()
@@ -359,7 +497,6 @@ class EventDrivenTrainer:
             ctx.fire(edat.ALL, "suspect", r)
         active = [r for r in st.alive
                   if r not in self._hb_done and r not in suspects
-                  and not self.states[r].done
                   and not self.runtime.is_dead(r)]
         if active:
             ctx.fire_after(cfg.hb_interval, edat.SELF, "__hbtick")
@@ -370,26 +507,41 @@ class EventDrivenTrainer:
         if suspected == ctx.rank:
             st.done = True          # fence myself: fail-stop enforcement
             return
-        if suspected in st.alive:
+        with st.mu:
+            if suspected not in st.alive:
+                return
             st.alive.remove(suspected)
-            if ctx.rank == 0:
-                self._hb_done.add(suspected)
-            if ctx.rank == min(st.alive) and self.cfg.ckpt_dir:
-                step = ckpt_store.latest_step(self.cfg.ckpt_dir) or 0
-                ctx.fire(edat.ALL, "recover", {"step": step})
+            lead = st.alive and ctx.rank == min(st.alive)
+        if ctx.rank == 0:
+            self._hb_done.add(suspected)
+        if lead and self.cfg.ckpt_dir:
+            step = ckpt_store.latest_step(self.cfg.ckpt_dir) or 0
+            ctx.fire(edat.ALL, "recover", {"step": step})
 
     def _on_rank_failed(self, ctx: edat.Context, events):
         st = self.states[ctx.rank]
         dead = events[0].data
-        if dead not in st.alive:
-            # already handled: the heartbeat-suspect path beat this event
-            # (or vice versa).  Firing "recover" again here was the known
-            # duplicate-recovery flake — two rollbacks racing the restarted
-            # step chain could diverge the replicas.
-            return
-        st.alive.remove(dead)
+        with st.mu:
+            if dead not in st.alive:
+                # already handled: the heartbeat-suspect path beat this
+                # event, or an earlier RANK_FAILED's sweep took it (one
+                # SIGKILLed process surfaces one event per hosted rank).
+                # Re-firing "recover" here was the known duplicate-recovery
+                # flake — two rollbacks racing the restarted step chain
+                # could diverge the replicas.
+                return
+            # process-granularity sweep: every rank the transport already
+            # knows to be dead leaves `alive` NOW, so a multi-rank process
+            # death triggers exactly one coordinated recovery instead of
+            # one per hosted rank.
+            swept = [d for d in list(st.alive)
+                     if d != ctx.rank and (d == dead
+                                           or self.runtime.is_dead(d))]
+            for d in swept:
+                st.alive.remove(d)
+            lead = st.alive and ctx.rank == min(st.alive)
         # leader triggers a coordinated rollback to the last durable ckpt
-        if ctx.rank == min(st.alive) and self.cfg.ckpt_dir:
+        if lead and self.cfg.ckpt_dir:
             step = ckpt_store.latest_step(self.cfg.ckpt_dir) or 0
             ctx.fire(edat.ALL, "recover", {"step": step})
 
@@ -411,4 +563,266 @@ class EventDrivenTrainer:
             st.step = step
             st.epoch += 1        # invalidates in-flight grads
             epoch_now = st.epoch
+        with self._hist_mu:
+            self.recoveries.append({"rank": ctx.rank, "step": step,
+                                    "epoch": epoch_now})
         ctx.fire(edat.SELF, "go", epoch_now)
+
+
+# ------------------------------------------------- distributed (processes)
+_SPAWN_MU = threading.Lock()
+_SPAWN_TRAINER: Optional[EventDrivenTrainer] = None
+
+
+def _write_json(path: str, obj) -> None:
+    # unique temp name: concurrent final events (one per finishing rank,
+    # possibly on different workers) must not steal each other's rename
+    import tempfile
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp")
+    with os.fdopen(fd, "w") as f:
+        json.dump(obj, f)
+    os.replace(tmp, path)
+
+
+def _attach_savers(trainer: EventDrivenTrainer, out_dir: str) -> None:
+    """Persistence hooks for spawned runs (rank-0's process): every final
+    event writes that rank's params as a flat .npz, and every metric OR
+    final event rewrites history/recoveries.  The metric-side rewrite
+    matters: _metric_task and _final_task are independent persistent
+    tasks, so with >1 worker a rank's final can execute before its last
+    metric — the metric's own rewrite then repairs the file.  Metrics
+    only trigger a rewrite once finals have started (the repair window):
+    the steady-state training path stays free of per-step file I/O."""
+    def write_logs() -> None:
+        with trainer._hist_mu:
+            hist = sorted(trainer.history, key=lambda m: m["step"])
+            rec = list(trainer.recoveries)
+        _write_json(os.path.join(out_dir, "history.json"), hist)
+        _write_json(os.path.join(out_dir, "recoveries.json"), rec)
+
+    def on_final(p: Dict[str, Any]) -> None:
+        np.savez(os.path.join(out_dir, f"final_rank{p['rank']}.npz"),
+                 step=np.int64(p["step"]), **flatten_params(p["params"]))
+        write_logs()
+
+    def on_metric(_m: Dict[str, Any]) -> None:
+        if trainer.final_params:
+            write_logs()
+
+    trainer.on_final = on_final
+    trainer.on_metric = on_metric
+
+
+def _spawned_trainer_main(ctx: edat.Context, *, model_cfg, data_cfg,
+                          opt_cfg, trainer_cfg,
+                          out_dir: Optional[str] = None) -> None:
+    """SPMD entry point for ``edat.launch_processes``: one shared
+    :class:`EventDrivenTrainer` per process (built lazily by whichever
+    local rank thread arrives first), attached per rank.  The process
+    hosting rank 0 persists history/recoveries/final params to
+    ``out_dir`` as they arrive, so the launcher parent can read the
+    results even though the trainer object dies with the child."""
+    global _SPAWN_TRAINER
+    with _SPAWN_MU:
+        tr = _SPAWN_TRAINER
+        if tr is None:
+            from repro.models import build_model
+            model = build_model(model_cfg)
+            tr = EventDrivenTrainer(model, data_cfg, opt_cfg, trainer_cfg)
+            if out_dir:
+                os.makedirs(out_dir, exist_ok=True)
+                _attach_savers(tr, out_dir)
+            _SPAWN_TRAINER = tr
+    tr.start(ctx)
+
+
+def load_distributed_results(out_dir: str) -> Dict[str, Any]:
+    """Read what a spawned trainer run left in ``out_dir``: ``history``,
+    ``recoveries``, and ``final_params`` ({rank: {path: array}})."""
+    out: Dict[str, Any] = {"history": [], "recoveries": [],
+                           "final_params": {}}
+    hist = os.path.join(out_dir, "history.json")
+    if os.path.exists(hist):
+        with open(hist) as f:
+            out["history"] = json.load(f)
+    rec = os.path.join(out_dir, "recoveries.json")
+    if os.path.exists(rec):
+        with open(rec) as f:
+            out["recoveries"] = json.load(f)
+    for name in sorted(os.listdir(out_dir)):
+        if name.startswith("final_rank") and name.endswith(".npz"):
+            r = int(name[len("final_rank"):-len(".npz")])
+            with np.load(os.path.join(out_dir, name)) as z:
+                out["final_params"][r] = {k: z[k] for k in z.files
+                                          if k != "step"}
+    return out
+
+
+def distributed_train(n_ranks: int, model_cfg, data_cfg, opt_cfg,
+                      trainer_cfg: TrainerCfg, *,
+                      n_procs: Optional[int] = None,
+                      timeout: float = 300.0,
+                      out_dir: Optional[str] = None,
+                      **launch_kwargs) -> Dict[str, Any]:
+    """Run the elastic trainer SPMD across OS processes over
+    ``SocketTransport`` and return ``{"history", "recoveries",
+    "final_params", "stats"}``.  ``n_procs`` packs several ranks per
+    process (co-located gradient exchange stays in-process); the model is
+    rebuilt from ``model_cfg`` inside each child.  ``trainer_cfg.ckpt_dir``
+    must be on storage every process can reach — it is both the async
+    checkpoint sink and the recovery source when a process dies.  Extra
+    kwargs go to :func:`repro.net.launch.launch_processes` (e.g.
+    ``hb_interval``, ``hb_timeout``, ``check``)."""
+    import functools
+    import tempfile
+    from repro.net.launch import launch_processes
+
+    cfg = dataclasses.replace(trainer_cfg, n_ranks=n_ranks)
+    own_tmp = out_dir is None
+    if own_tmp:
+        tmp_ctx = tempfile.TemporaryDirectory(prefix="edat_train_out_")
+        out_dir = tmp_ctx.name
+    try:
+        stats = launch_processes(
+            n_ranks,
+            functools.partial(_spawned_trainer_main, model_cfg=model_cfg,
+                              data_cfg=data_cfg, opt_cfg=opt_cfg,
+                              trainer_cfg=cfg, out_dir=out_dir),
+            timeout=timeout, n_procs=n_procs,
+            workers_per_rank=cfg.workers_per_rank, unconsumed="ignore",
+            **launch_kwargs)
+        res = load_distributed_results(out_dir)
+        res["stats"] = stats
+        return res
+    finally:
+        if own_tmp:
+            tmp_ctx.cleanup()
+
+
+# ------------------------------------------------------ module-level main
+def _demo_cfgs(n_ranks: int, steps: int, ckpt_dir: Optional[str],
+               ckpt_every: int = 4):
+    """Small default model/data/opt/trainer configs for the CLI and the
+    ``repro.net.launch`` module-spec entry point."""
+    from repro.models import ModelCfg
+    model_cfg = ModelCfg(
+        name="tiny", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, head_dim=16, d_ff=128, vocab=128,
+        dtype="float32", remat="none", max_target_length=64)
+    data_cfg = DataCfg(vocab=128, seq=32, global_batch=12, seed=7)
+    opt_cfg = OptCfg(name="adamw", peak_lr=3e-2, warmup=5, total_steps=200,
+                     clip_norm=1.0)
+    trainer_cfg = TrainerCfg(steps=steps, n_ranks=n_ranks,
+                             ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+                             collect_timeout=60.0)
+    return model_cfg, data_cfg, opt_cfg, trainer_cfg
+
+
+def main(ctx: edat.Context) -> None:
+    """Module-level SPMD main, runnable as::
+
+        python -m repro.net.launch -n 4 --procs 2 --unconsumed ignore \\
+            repro.runtime_dist.trainer:main
+
+    Configured by environment (shared across the launched processes):
+    ``EDAT_TRAIN_STEPS`` (default 8), ``EDAT_TRAIN_CKPT_EVERY`` (4), and
+    ``EDAT_TRAIN_CKPT`` — the shared checkpoint/result directory (default:
+    a temp path derived from the coordinator address, which every process
+    of one launch shares)."""
+    import tempfile
+    steps = int(os.environ.get("EDAT_TRAIN_STEPS", "8"))
+    every = int(os.environ.get("EDAT_TRAIN_CKPT_EVERY", "4"))
+    base = os.environ.get("EDAT_TRAIN_CKPT")
+    if not base:
+        # EDAT_LAUNCH_ID is unique per launch (a reused coordinator port
+        # must not resurrect a previous run's checkpoints); the coord
+        # address is the fallback for externally-managed process groups
+        tag = (os.environ.get("EDAT_LAUNCH_ID")
+               or os.environ.get("EDAT_COORD", "local").replace(":", "_"))
+        base = os.path.join(tempfile.gettempdir(), f"edat_trainer_{tag}")
+    model_cfg, data_cfg, opt_cfg, trainer_cfg = _demo_cfgs(
+        ctx.n_ranks, steps, os.path.join(base, "ckpt"), every)
+    _spawned_trainer_main(ctx, model_cfg=model_cfg, data_cfg=data_cfg,
+                          opt_cfg=opt_cfg, trainer_cfg=trainer_cfg,
+                          out_dir=os.path.join(base, "out"))
+
+
+def _cli(argv=None) -> int:
+    """Distributed-trainer smoke: spawn ranks over SocketTransport,
+    optionally SIGKILL one process mid-training, and verify elastic
+    recovery — CI runs this with ``--kill``."""
+    import argparse
+    import tempfile
+    from repro.checkpoint import latest_step
+    from repro.net.launch import ProcessGroup
+    import functools
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.runtime_dist.trainer",
+        description="Distributed elastic trainer smoke test.")
+    ap.add_argument("--ranks", type=int, default=4)
+    ap.add_argument("--procs", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--ckpt-every", type=int, default=3)
+    ap.add_argument("--kill", action="store_true",
+                    help="SIGKILL the last process once the first real "
+                         "checkpoint exists; survivors must recover and "
+                         "finish")
+    ap.add_argument("--timeout", type=float, default=240.0)
+    a = ap.parse_args(argv)
+
+    with tempfile.TemporaryDirectory(prefix="edat_trainer_smoke_") as td:
+        ckdir = os.path.join(td, "ck")
+        outdir = os.path.join(td, "out")
+        os.makedirs(outdir)
+        model_cfg, data_cfg, opt_cfg, trainer_cfg = _demo_cfgs(
+            a.ranks, a.steps, ckdir, a.ckpt_every)
+        pg = ProcessGroup(
+            a.ranks,
+            functools.partial(_spawned_trainer_main, model_cfg=model_cfg,
+                              data_cfg=data_cfg, opt_cfg=opt_cfg,
+                              trainer_cfg=trainer_cfg, out_dir=outdir),
+            n_procs=a.procs, run_timeout=a.timeout,
+            workers_per_rank=trainer_cfg.workers_per_rank,
+            unconsumed="ignore", hb_interval=0.2, hb_timeout=1.5)
+        pg.start()
+        if a.kill:
+            deadline = time.monotonic() + a.timeout
+            while ((latest_step(ckdir) or 0) < a.ckpt_every
+                   and time.monotonic() < deadline):
+                time.sleep(0.05)
+            got = latest_step(ckdir) or 0
+            if got < a.ckpt_every:
+                pg.wait(5, check=False)
+                print(f"smoke FAILED: no checkpoint appeared (latest={got})")
+                return 1
+            pg.kill(a.ranks - 1)
+            print(f"[smoke] killed the process hosting rank {a.ranks - 1} "
+                  f"at checkpoint step {got}")
+        pg.wait(a.timeout, check=not a.kill)
+        res = load_distributed_results(outdir)
+        top = max((m["step"] for m in res["history"]), default=0)
+        print(f"[smoke] steps reached: {top}/{a.steps}; "
+              f"recoveries: {res['recoveries']}; "
+              f"finals from ranks {sorted(res['final_params'])}")
+        if top < a.steps:
+            print("smoke FAILED: training did not reach the target step")
+            return 1
+        if a.kill and not res["recoveries"]:
+            print("smoke FAILED: no elastic recovery was recorded")
+            return 1
+        if a.kill:
+            survivors = set(range(a.ranks)) - set(
+                pg._proc_of(a.ranks - 1)[1])
+            if not survivors.issubset(set(res["final_params"])):
+                print(f"smoke FAILED: missing finals "
+                      f"{survivors - set(res['final_params'])}")
+                return 1
+        print("[smoke] OK")
+        return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(_cli())

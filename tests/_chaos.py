@@ -1,0 +1,138 @@
+"""Shared fault-injection test harness.
+
+The kill/stall plumbing that used to be copy-pasted across the
+distributed test files lives here:
+
+* :func:`wait_for` / :func:`wait_for_file` — deadline-bounded condition
+  polling (the ready-file handshake every SIGKILL test uses to prove the
+  victim was genuinely mid-work before the kill);
+* :func:`wait_for_history` — block until an in-proc trainer has really
+  started stepping.  Killing "after 2 in ``alive``" at t=0 is vacuous:
+  ``alive`` is empty until ``_init_state`` runs, and the first JIT can
+  take seconds (see test_duplicate_recover_suppressed's history);
+* :class:`Saboteur` — a background fault injector: runs ``fn`` after an
+  optional predicate and delay, records any exception, and re-raises it
+  at :meth:`join` so a broken saboteur fails the test instead of
+  silently doing nothing;
+* :func:`sigkill_when_ready` — the SIGKILL-at-phase pattern for spawned
+  :class:`~repro.net.launch.ProcessGroup` runs: wait for the victim's
+  ready file, let it settle into its stall, then kill its process;
+* :func:`crash_socket` — simulate a process crash on a raw socket:
+  ``shutdown(SHUT_RDWR)`` *then* close.  A plain ``close()`` does not
+  send FIN while another duplicated fd still holds the connection, so
+  the peer's failure detector would never fire;
+* :func:`stall_spec` — the trainer's ``{rank: (step, seconds)}`` stall
+  injection, named so tests read as intent.
+"""
+from __future__ import annotations
+
+import os
+import socket
+import threading
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+
+def wait_for(pred: Callable[[], Any], timeout: float = 60.0,
+             interval: float = 0.05, desc: str = "condition") -> Any:
+    """Poll ``pred`` until it returns a truthy value; return that value.
+    Raises ``TimeoutError`` (test fails fast, never wedges CI)."""
+    deadline = time.monotonic() + timeout
+    while True:
+        val = pred()
+        if val:
+            return val
+        if time.monotonic() >= deadline:
+            raise TimeoutError(f"{desc} not met within {timeout}s")
+        time.sleep(interval)
+
+
+def wait_for_file(path: str, timeout: float = 60.0) -> None:
+    """Wait until ``path`` exists — the victim-is-ready handshake."""
+    wait_for(lambda: os.path.exists(path), timeout,
+             desc=f"ready file {path!r}")
+
+
+def wait_for_history(trainer, n: int = 1, timeout: float = 120.0) -> None:
+    """Wait until an (in-proc) EventDrivenTrainer has recorded at least
+    ``n`` metric events — i.e. training is genuinely under way (survives
+    the multi-second first-JIT window where ``alive`` is still [])."""
+    def some():
+        with trainer._hist_mu:
+            return len(trainer.history) >= n
+    wait_for(some, timeout, desc=f"trainer history >= {n}")
+
+
+class Saboteur:
+    """Background fault injector.
+
+    Runs ``fn()`` on a daemon thread once ``pred()`` (if given) holds and
+    ``delay`` has elapsed.  Any exception (including a failed ``pred``
+    wait) is captured and re-raised from :meth:`join`, so a saboteur that
+    never managed to inject its fault fails the test loudly instead of
+    letting it pass vacuously.
+    """
+
+    def __init__(self, fn: Callable[[], Any], *,
+                 pred: Optional[Callable[[], Any]] = None,
+                 delay: float = 0.0, timeout: float = 120.0,
+                 name: str = "saboteur"):
+        self.fn = fn
+        self.pred = pred
+        self.delay = delay
+        self.timeout = timeout
+        self.fired = threading.Event()
+        self.error: Optional[BaseException] = None
+        self._t = threading.Thread(target=self._run, daemon=True, name=name)
+
+    def _run(self) -> None:
+        try:
+            if self.pred is not None:
+                wait_for(self.pred, self.timeout, desc="saboteur trigger")
+            if self.delay:
+                time.sleep(self.delay)
+            self.fn()
+            self.fired.set()
+        except BaseException as e:  # noqa: BLE001 - reported at join()
+            self.error = e
+
+    def start(self) -> "Saboteur":
+        self._t.start()
+        return self
+
+    def join(self, timeout: float = 150.0) -> None:
+        """Wait for the injection to have happened; re-raise its error."""
+        self._t.join(timeout)
+        if self.error is not None:
+            raise self.error
+        assert self.fired.is_set(), "saboteur never fired"
+
+
+def sigkill_when_ready(pg, rank: int, ready_path: str, *,
+                       timeout: float = 60.0,
+                       settle: float = 0.2) -> float:
+    """SIGKILL-at-phase for spawned process groups: wait until the victim
+    touches ``ready_path`` (proving it reached the instrumented phase),
+    give in-flight frames ``settle`` seconds, then kill the process
+    hosting ``rank``.  Returns the kill timestamp (monotonic)."""
+    wait_for_file(ready_path, timeout)
+    time.sleep(settle)
+    t0 = time.monotonic()
+    pg.kill(rank)
+    return t0
+
+
+def crash_socket(sock: socket.socket) -> None:
+    """Simulated crash: sever the connection without a clean BYE."""
+    try:
+        sock.shutdown(socket.SHUT_RDWR)
+    except OSError:
+        pass
+    sock.close()
+
+
+def stall_spec(rank: int, at_step: int,
+               seconds: float) -> Dict[int, Tuple[int, float]]:
+    """Trainer stall injection: ``rank`` hangs ``seconds`` at
+    ``at_step`` (its heartbeat pump goes silent too, like a real hang)."""
+    return {rank: (at_step, seconds)}

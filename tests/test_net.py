@@ -21,6 +21,7 @@ import time
 
 import pytest
 
+import _chaos as chaos
 from repro import edat
 from repro.core.transport import CONTROL, EVENT, Message, Transport
 from repro.net import SocketTransport, bootstrap
@@ -130,8 +131,7 @@ def test_abrupt_close_declares_peer_dead():
     tb = SocketTransport(1, 2, {0: b})
     deaths = []
     tb.on_peer_dead = deaths.append
-    a.shutdown(socket.SHUT_RDWR)                 # simulated crash: no BYE
-    a.close()
+    chaos.crash_socket(a)                        # simulated crash: no BYE
     deadline = time.monotonic() + 5
     while not deaths and time.monotonic() < deadline:
         time.sleep(0.01)
@@ -479,6 +479,32 @@ def test_launch_processes_four_rank_ring():
     assert stats["run_seconds"] > 0
 
 
+def test_coordinator_port_race_bind_retry(monkeypatch):
+    """Regression for the _free_port TOCTOU race: the launcher probes a
+    free port, releases it, and only later does the rank-0 child bind it
+    as the coordinator — another process can squat it in the gap.  Here
+    the test pre-occupies exactly the probed port with a listening
+    socket and releases it ~1s in; the coordinator's bind-with-retry on
+    EADDRINUSE must ride out the squatter instead of crashing the
+    world (which is what the old single-shot bind did)."""
+    from repro.net import launch as launch_mod
+
+    squatter = socket.socket()
+    squatter.bind(("127.0.0.1", 0))
+    squatter.listen(1)
+    port = squatter.getsockname()[1]
+    monkeypatch.setattr(launch_mod, "_free_port",
+                        lambda host="127.0.0.1": port)
+    releaser = chaos.Saboteur(squatter.close, delay=2.5,
+                              name="port-squatter").start()
+    try:
+        stats = launch_processes(
+            2, functools.partial(_ring_main, n_hops=20), timeout=60)
+    finally:
+        releaser.join()
+    assert stats["events_sent"] == 20            # the run really happened
+
+
 def _stuck_main(ctx, ready_path=""):
     def on_fail(c, events):
         pass
@@ -496,12 +522,7 @@ def test_process_kill_detected_by_heartbeat(tmp_path):
     pg = ProcessGroup(4, functools.partial(_stuck_main, ready_path=ready),
                       run_timeout=60, hb_interval=0.2, hb_timeout=1.5)
     pg.start()
-    deadline = time.monotonic() + 60
-    while not os.path.exists(ready) and time.monotonic() < deadline:
-        time.sleep(0.05)
-    assert os.path.exists(ready), "rank 3 never came up"
-    time.sleep(0.3)
-    pg.kill(3)
+    chaos.sigkill_when_ready(pg, 3, ready, timeout=60, settle=0.3)
     stats = pg.wait(60)
     codes = pg.exitcodes()
     assert codes[3] != 0                      # the victim

@@ -19,6 +19,7 @@ import time
 import numpy as np
 import pytest
 
+import _chaos as chaos
 from repro.analytics import InsituCfg, distributed_insitu
 from repro.graph import (ReferenceBFS, build_csr, distributed_bfs,
                          kronecker_edges)
@@ -54,13 +55,7 @@ def test_distributed_bfs_rank_kill_terminates_via_rank_failed(tmp_path):
                           ready_path=ready),
         run_timeout=60, hb_interval=0.2, hb_timeout=1.5)
     pg.start()
-    deadline = time.monotonic() + 60
-    while not os.path.exists(ready) and time.monotonic() < deadline:
-        time.sleep(0.05)
-    assert os.path.exists(ready), "rank 1 never reached the stall level"
-    time.sleep(0.2)
-    t0 = time.monotonic()
-    pg.kill(1)
+    t0 = chaos.sigkill_when_ready(pg, 1, ready, timeout=60, settle=0.2)
     pg.wait(60, check=False)
     took = time.monotonic() - t0
     codes = pg.exitcodes()

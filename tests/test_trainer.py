@@ -1,6 +1,7 @@
 """Integration tests for the event-driven distributed trainer:
 sync DP equivalence, loss decrease, async quorum, int8 gradient events,
-async checkpointing + restart, node-failure recovery (elastic)."""
+async checkpointing + restart, node-failure recovery (elastic).
+Fault injection goes through the shared tests/_chaos.py harness."""
 import os
 
 import jax
@@ -8,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import _chaos as chaos
 from repro.data import DataCfg
 from repro.models import ModelCfg, build_model
 from repro.optim import OptCfg
@@ -105,20 +107,19 @@ def test_async_checkpoint_and_restart(tmp_path):
 def test_node_failure_recovery_elastic(tmp_path):
     """Kill a rank mid-run: survivors roll back to the last checkpoint,
     re-shard data, and finish training."""
-    import threading
-    import time
+    from repro.checkpoint import latest_step
 
     ckdir = str(tmp_path / "ck")
     tr = make_trainer(steps=30, n_ranks=3, ckpt_dir=ckdir, ckpt_every=5,
                       collect_timeout=1.0)
 
-    def killer():
-        time.sleep(1.5)   # let a few steps and a checkpoint happen
-        tr.runtime.kill_rank(2)
-
-    t = threading.Thread(target=killer, daemon=True)
-    t.start()
+    # kill only once a real (non-initial) checkpoint exists — the rollback
+    # anchor the survivors need, without racing the first JIT
+    sab = chaos.Saboteur(lambda: tr.runtime.kill_rank(2),
+                         pred=lambda: (latest_step(ckdir) or 0) >= 5,
+                         delay=0.3).start()
     out = tr.run(timeout=240)
+    sab.join()
     hist = out["history"]
     assert max(m["step"] for m in hist) >= 30
     # survivors end in agreement
@@ -138,7 +139,7 @@ def test_heartbeat_suspects_hung_rank(tmp_path):
     ckdir = str(tmp_path / "ck")
     tr = make_trainer(steps=24, n_ranks=3, ckpt_dir=ckdir, ckpt_every=4,
                       collect_timeout=0.8, hb_interval=0.25, hb_timeout=1.2,
-                      stall={2: (6, 4.0)})   # rank 2 hangs 4s at step 6
+                      stall=chaos.stall_spec(2, at_step=6, seconds=4.0))
     out = tr.run(timeout=240)
     hist = out["history"]
     assert max(m["step"] for m in hist) >= 24
@@ -162,7 +163,6 @@ def test_duplicate_recover_suppressed(tmp_path, monkeypatch):
     was already out of ``alive``, racing the restarted step chain with a
     second rollback."""
     import collections
-    import threading
     import time
 
     ckdir = str(tmp_path / "ck")
@@ -172,7 +172,7 @@ def test_duplicate_recover_suppressed(tmp_path, monkeypatch):
     # flight when the saboteur delivers the second (RANK_FAILED) verdict
     tr = make_trainer(steps=40, n_ranks=3, ckpt_dir=ckdir, ckpt_every=2,
                       collect_timeout=0.5, hb_interval=0.25, hb_timeout=1.2,
-                      stall={2: (4, 6.0)})
+                      stall=chaos.stall_spec(2, at_step=4, seconds=6.0))
     recovers = collections.Counter()
     suspects = collections.Counter()
     orig = EventDrivenTrainer._on_recover
@@ -189,21 +189,16 @@ def test_duplicate_recover_suppressed(tmp_path, monkeypatch):
     monkeypatch.setattr(EventDrivenTrainer, "_on_recover", counting)
     monkeypatch.setattr(EventDrivenTrainer, "_on_suspect", counting_suspect)
 
-    def saboteur():
-        deadline = time.monotonic() + 120
-        while time.monotonic() < deadline:
-            with tr._hist_mu:            # wait for training to be underway
-                if tr.history:           # (alive starts empty during init)
-                    break
-            time.sleep(0.05)
-        while 2 in tr.states[0].alive and time.monotonic() < deadline:
-            time.sleep(0.05)             # wait for the suspect verdict
+    def sabotage():
+        chaos.wait_for_history(tr)       # alive starts empty during init
+        chaos.wait_for(lambda: 2 not in tr.states[0].alive, 120,
+                       desc="suspect verdict on rank 2")
         time.sleep(0.5)                  # let the recover broadcast land
         tr.runtime.kill_rank(2)          # RANK_FAILED path fires as well
 
-    t = threading.Thread(target=saboteur, daemon=True)
-    t.start()
+    sab = chaos.Saboteur(sabotage).start()
     out = tr.run(timeout=240)
+    sab.join()
     hist = out["history"]
     assert max(m["step"] for m in hist) >= 40
     # the suspicion path must really have run first (else the test is
