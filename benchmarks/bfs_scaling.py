@@ -5,7 +5,7 @@ comparison and the crossover trend as rank count grows.)
 
 ``--transport socket`` runs the *same* event-driven BFS with one OS
 process per rank over ``repro.net``'s coalescing SocketTransport
-(spawned via ``edat.launch_processes``); each row then also records
+(spawned via the v2 ``edat.Session``); each row then also records
 ``events_per_s`` (user events fired per second of in-child run time,
 summed over all ranks — includes each rank's SELF loopback fires, which
 stay in-process) alongside TEPS, and every parent array is validated
@@ -20,8 +20,11 @@ import time
 
 import numpy as np
 
-from repro.graph import (EdatBFS, ReferenceBFS, build_csr, distributed_bfs,
+from repro.graph import (EdatBFS, ReferenceBFS, build_csr,
                          kronecker_edges, validate_bfs_tree)
+# the Session-backed distributed run (the deprecated shim minus the
+# warning), so the bench and the v1 compat path can never drift apart
+from repro.graph.bfs import _distributed_bfs
 
 
 def run(scale: int = 13, edgefactor: int = 16, ranks=(1, 2, 4, 8),
@@ -44,8 +47,8 @@ def run(scale: int = 13, edgefactor: int = 16, ranks=(1, 2, 4, 8),
             csr = build_csr(edges, n, nr) if validate else None
             teps_list, evs_list = [], []
             for root in root_set:
-                parent, info = distributed_bfs(
-                    nr, scale, edgefactor, seed=seed, root=root)
+                parent, info = _distributed_bfs(nr, scale, edgefactor,
+                                                seed, root)
                 teps_list.append(info["teps"])
                 evs_list.append(info["events_per_s"])
                 if validate:

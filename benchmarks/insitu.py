@@ -13,8 +13,10 @@ import argparse
 import json
 import os
 
-from repro.analytics import (BespokeAnalytics, EdatAnalytics, InsituCfg,
-                             distributed_insitu)
+from repro.analytics import BespokeAnalytics, EdatAnalytics, InsituCfg
+# the Session-backed distributed run (the deprecated shim minus the
+# warning), so the bench and the v1 compat path can never drift apart
+from repro.analytics.insitu import _distributed_insitu as _socket_insitu
 
 
 def run(analytics=(1, 2, 4, 8), items: int = 64, elems: int = 1024,
@@ -34,7 +36,7 @@ def run(analytics=(1, 2, 4, 8), items: int = 64, elems: int = 1024,
                   f"bw={b['bandwidth_items_s']:9.1f}/s "
                   f"lat={b['mean_latency_s']*1e3:7.2f}ms")
         if transport in ("socket", "both"):
-            s = distributed_insitu(cfg)
+            s = _socket_insitu(cfg)
             row["edat_socket"] = s
             print(f"  insitu n={n:2d} edat-sock "
                   f"bw={s['bandwidth_items_s']:9.1f}/s "

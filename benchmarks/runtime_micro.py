@@ -8,12 +8,18 @@ with the scheduling of tasks and managing of dependencies"):
   * progress-mode comparison (dedicated thread vs idle-worker polling);
   * many-consumer routing: N persistent tasks with distinct eids — linear in
     N through the indexed router (was quadratic with the linear scan);
+  * session overhead: Session construction -> first task running, inproc
+    vs socket (the v2 API layer's cost; the socket number includes spawn
+    + rendezvous);
   * --transport axis: the same event-throughput and ping-pong-latency
     probes across OS processes over repro.net's SocketTransport
     (``--transport socket`` or ``both``), so the bench JSON tracks
     cross-process events/s and one-way latency alongside the in-proc
-    numbers.  Socket rates use the in-child wall time of ``Runtime.run``
+    numbers.  Socket rates use the in-child wall time of the session run
     (spawn + rendezvous excluded; reported separately as overhead).
+
+All probes run through the v2 ``edat.Session`` API, so any regression in
+the Session layer itself shows up in every number here.
 """
 from __future__ import annotations
 
@@ -27,6 +33,14 @@ import time
 from repro import edat
 
 
+def _inproc_stats(main, *, ranks, workers=1, progress="thread",
+                  unconsumed="error", timeout=240):
+    with edat.Session(ranks, workers_per_rank=workers, progress=progress,
+                      unconsumed=unconsumed, timeout=timeout) as s:
+        s.run(main)
+        return s.stats
+
+
 def _tasks_per_s(n_tasks=2000, workers=2):
     done = []
 
@@ -37,12 +51,9 @@ def _tasks_per_s(n_tasks=2000, workers=2):
         for _ in range(n_tasks):
             ctx.submit(t)
 
-    rt = edat.Runtime(1, workers_per_rank=workers)
-    t0 = time.monotonic()
-    rt.run(main, timeout=120)
-    dt = time.monotonic() - t0
+    stats = _inproc_stats(main, ranks=1, workers=workers, timeout=120)
     assert len(done) == n_tasks
-    return n_tasks / dt
+    return n_tasks / stats["run_seconds"]
 
 
 def _events_per_s(n_events=2000, progress="thread"):
@@ -58,17 +69,12 @@ def _events_per_s(n_events=2000, progress="thread"):
             for i in range(n_events):
                 ctx.fire(0, "e", i)
 
-    rt = edat.Runtime(2, workers_per_rank=1, progress=progress)
-    t0 = time.monotonic()
-    rt.run(main, timeout=120)
-    dt = time.monotonic() - t0
+    stats = _inproc_stats(main, ranks=2, progress=progress, timeout=120)
     assert len(got) == n_events
-    return n_events / dt
+    return n_events / stats["run_seconds"]
 
 
 def _pingpong_latency(n_iters=500):
-    t_hist = []
-
     def ping(ctx, events):
         if events[0].data < n_iters:
             ctx.fire(1, "ping", events[0].data + 1)
@@ -83,11 +89,8 @@ def _pingpong_latency(n_iters=500):
         else:
             ctx.submit_persistent(pong, deps=[(0, "ping")])
 
-    rt = edat.Runtime(2, workers_per_rank=1, unconsumed="ignore")
-    t0 = time.monotonic()
-    rt.run(main, timeout=120)
-    dt = time.monotonic() - t0
-    return dt / (2 * n_iters)   # one-way latency
+    stats = _inproc_stats(main, ranks=2, unconsumed="ignore", timeout=120)
+    return stats["run_seconds"] / (2 * n_iters)   # one-way latency
 
 
 def _events_per_s_batch(n_events=2000):
@@ -103,12 +106,9 @@ def _events_per_s_batch(n_events=2000):
         else:
             ctx.fire_batch([(0, "e", i) for i in range(n_events)])
 
-    rt = edat.Runtime(2, workers_per_rank=1)
-    t0 = time.monotonic()
-    rt.run(main, timeout=120)
-    dt = time.monotonic() - t0
+    stats = _inproc_stats(main, ranks=2, timeout=120)
     assert len(got) == n_events
-    return n_events / dt
+    return n_events / stats["run_seconds"]
 
 
 def _routing_events_per_s(n_consumers, events_per=2):
@@ -129,13 +129,39 @@ def _routing_events_per_s(n_consumers, events_per=2):
                 for i in range(n_consumers):
                     ctx.fire(0, f"e{i}", i)
 
-    rt = edat.Runtime(2, workers_per_rank=1)
-    t0 = time.monotonic()
-    rt.run(main, timeout=240)
-    dt = time.monotonic() - t0
+    stats = _inproc_stats(main, ranks=2, timeout=240)
     n = n_consumers * events_per
     assert len(got) == n
-    return n / dt
+    return n / stats["run_seconds"]
+
+
+# ------------------------------------------------- session overhead (v2 API)
+class _FirstTaskProbe:
+    """Program that records the wall-clock time its first task runs
+    (CLOCK_MONOTONIC is system-wide on Linux, so the child's stamp is
+    comparable with the driver's construction time)."""
+
+    def __init__(self):
+        self.t_first = None
+
+    def start(self, ctx):
+        if ctx.rank == 0:
+            ctx.submit(self._t)
+
+    def _t(self, ctx, events):
+        if self.t_first is None:
+            self.t_first = time.monotonic()
+
+    def result(self):
+        return self.t_first
+
+
+def _session_overhead_s(transport: str) -> float:
+    """Session construct -> first task executing, in seconds."""
+    t0 = time.monotonic()
+    t_first = edat.run(edat.deferred(_FirstTaskProbe), ranks=1,
+                       transport=transport, timeout=120)
+    return t_first - t0
 
 
 # --------------------------------------------- cross-process (SocketTransport)
@@ -167,19 +193,26 @@ def _sock_pingpong_main(ctx, n_iters=500):
         ctx.submit_persistent(pong, deps=[(0, "ping")])
 
 
+def _socket_stats(main, *, unconsumed="error"):
+    with edat.Session(2, transport="socket", unconsumed=unconsumed,
+                      timeout=120) as s:
+        t0 = time.monotonic()
+        s.run(main)
+        wall = time.monotonic() - t0
+        return s.stats, wall
+
+
 def _socket_events_per_s(n_events=2000):
-    t0 = time.monotonic()
-    stats = edat.launch_processes(
-        2, functools.partial(_sock_sink_main, n_events=n_events),
-        timeout=120)
-    overhead = time.monotonic() - t0 - stats["run_seconds"]
+    stats, wall = _socket_stats(
+        functools.partial(_sock_sink_main, n_events=n_events))
+    overhead = wall - stats["run_seconds"]
     return n_events / stats["run_seconds"], overhead
 
 
 def _socket_pingpong_latency(n_iters=500):
-    stats = edat.launch_processes(
-        2, functools.partial(_sock_pingpong_main, n_iters=n_iters),
-        timeout=120, unconsumed="ignore")
+    stats, _ = _socket_stats(
+        functools.partial(_sock_pingpong_main, n_iters=n_iters),
+        unconsumed="ignore")
     return stats["run_seconds"] / (2 * n_iters)   # one-way latency
 
 
@@ -199,12 +232,14 @@ def run(out: str = None, transport: str = "inproc"):
             "routing_events_per_s_1000": r1000,
             # ~1.0 when routing is linear in consumer count; << 1 quadratic
             "routing_scaling_1000_vs_250": r1000 / r250,
+            "session_overhead_s_inproc": _session_overhead_s("inproc"),
         })
     if transport in ("socket", "both"):
         ev_s, spawn_s = _socket_events_per_s()
         res["events_per_s_socket"] = ev_s
         res["event_latency_us_socket"] = _socket_pingpong_latency() * 1e6
         res["socket_spawn_overhead_s"] = spawn_s
+        res["session_overhead_s_socket"] = _session_overhead_s("socket")
     for k, v in res.items():
         print(f"  micro {k} = {v:.1f}" if v >= 10 else f"  micro {k} = {v:.3f}")
     if out:

@@ -2,8 +2,8 @@
 in-proc (threads-as-ranks) vs distributed (OS processes over the
 coalescing SocketTransport, several ranks per process).
 
-``--transport socket`` runs :func:`repro.runtime_dist.distributed_train`
-— the same trainer SPMD across spawned processes, co-located ranks
+``--transport socket`` runs the same trainer program through a socket
+``edat.Session`` — SPMD across spawned processes, co-located ranks
 exchanging gradients in-process (zero socket frames) and remote ranks
 over the wire.  Each row records:
 
@@ -52,11 +52,17 @@ def run(steps: int = 12, ranks=(1, 2, 4), transport: str = "inproc",
         model_cfg, data_cfg, opt_cfg, trainer_cfg = _demo_cfgs(
             nr, steps, ckpt_dir=None)
         if transport == "socket":
-            from repro.runtime_dist import distributed_train
+            from repro import edat
+            from repro.runtime_dist import trainer_program
             np_ = min(procs or max(1, nr // 2), nr)
-            res = distributed_train(nr, model_cfg, data_cfg, opt_cfg,
-                                    trainer_cfg, n_procs=np_, timeout=600.0)
-            wall = float(res["stats"].get("run_seconds", 0.0))
+            with edat.Session(nr, procs=np_, transport="socket",
+                              timeout=600.0, unconsumed="ignore",
+                              workers_per_rank=trainer_cfg.workers_per_rank
+                              ) as s:
+                s.run(edat.deferred(trainer_program, model_cfg, data_cfg,
+                                    opt_cfg, trainer_cfg))
+                res = s.gather()
+                wall = float(s.stats.get("run_seconds", 0.0))
             rows.append(_row_from_history(res["history"], steps, wall,
                                           "edat-socket", nr, np_))
         else:

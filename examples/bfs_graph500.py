@@ -8,7 +8,8 @@ import time
 
 import numpy as np
 
-from repro.graph import (EdatBFS, ReferenceBFS, build_csr, distributed_bfs,
+from repro import edat
+from repro.graph import (EdatBFS, ReferenceBFS, bfs_program, build_csr,
                          kronecker_edges, validate_bfs_tree)
 
 
@@ -36,12 +37,22 @@ def main():
 
     if args.transport == "socket":
         assert not args.reference, "--transport socket runs the EDAT BFS"
-        parent, info = distributed_bfs(args.ranks, args.scale,
-                                       args.edgefactor, root=root,
-                                       workers_per_rank=args.workers)
+        # v2: the Session owns spawn/rendezvous/teardown; each process
+        # rebuilds the graph deterministically via the deferred factory
+        with edat.Session(args.ranks, transport="socket",
+                          workers_per_rank=args.workers) as s:
+            s.run(edat.deferred(bfs_program, args.ranks, args.scale,
+                                edgefactor=args.edgefactor, root=root,
+                                workers_per_rank=args.workers))
+            res = s.gather()
+            stats = s.stats
+        parent = res["parent"]
+        traversed = int(np.sum(res["traversed"]))
+        dt = max(stats["run_seconds"], 1e-9)
         print(f"EDAT BFS over {args.ranks} processes: "
-              f"{info['traversed']} edges in {info['run_seconds']:.3f}s "
-              f"-> {info['teps']:.3e} TEPS ({info['events_per_s']:.0f} "
+              f"{traversed} edges in {dt:.3f}s "
+              f"-> {traversed / dt:.3e} TEPS "
+              f"({stats.get('events_sent', 0) / dt:.0f} "
               f"events/s); reached {(parent >= 0).sum()}/{n}")
         if args.validate:
             ok = validate_bfs_tree(edges, parent, root)

@@ -3,10 +3,14 @@ analytics ranks with raw field events; persistent EDAT tasks analyse,
 reduce across analytics ranks (distributed roots) and 'write'.
 
   PYTHONPATH=src python examples/insitu_analytics.py --analytics 4
+  PYTHONPATH=src python examples/insitu_analytics.py --analytics 2 --transport socket
 """
 import argparse
+import dataclasses
 
-from repro.analytics import BespokeAnalytics, EdatAnalytics, InsituCfg
+from repro import edat
+from repro.analytics import (BespokeAnalytics, EdatAnalytics, InsituCfg,
+                             insitu_program)
 
 
 def main():
@@ -14,13 +18,27 @@ def main():
     ap.add_argument("--analytics", type=int, default=4)
     ap.add_argument("--items", type=int, default=64)
     ap.add_argument("--elems", type=int, default=1024)
+    ap.add_argument("--transport", choices=("inproc", "socket"),
+                    default="inproc",
+                    help="threads-as-ranks, or one OS process per rank "
+                         "over the coalescing SocketTransport")
     ap.add_argument("--bespoke", action="store_true",
-                    help="also run the MONC-style baseline")
+                    help="also run the MONC-style baseline (inproc)")
     args = ap.parse_args()
 
     cfg = InsituCfg(n_analytics=args.analytics,
                     items_per_producer=args.items, field_elems=args.elems,
                     n_fields=2)
+    if args.transport == "socket":
+        with edat.Session(2 * cfg.n_analytics, transport="socket",
+                          timeout=180, workers_per_rank=4) as s:
+            s.run(edat.deferred(insitu_program, dataclasses.asdict(cfg)))
+            summary = s.gather()
+            dt = s.stats["run_seconds"]
+        raw = cfg.n_analytics * cfg.items_per_producer
+        print(f"EDAT (socket): {raw} items, {raw / dt:.1f} items/s, "
+              f"latency {summary['mean_latency_s'] * 1e3:.2f} ms")
+        return
     res = EdatAnalytics(cfg).run()
     print(f"EDAT    : {res['raw_items']} items, "
           f"{res['bandwidth_items_s']:.1f} items/s, "

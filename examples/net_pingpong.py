@@ -1,37 +1,51 @@
 """Multi-process ring ping-pong over SocketTransport (repro.net).
 
-Four OS processes, one EDAT rank each.  A token circulates the ring
-``0 -> 1 -> 2 -> 3 -> 0`` for ``N_HOPS`` hops; every rank runs one
-persistent relay task depending on its left neighbour's ``token`` event.
-Termination is the unmodified Mattern detector, now speaking CONTROL
-messages across process boundaries.
-
-Run it either way:
+``--ranks`` OS-hosted EDAT ranks (packed into ``--procs`` processes; one
+each by default).  A token circulates the ring ``0 -> 1 -> ... -> 0``
+for ``N_HOPS`` hops; every rank runs one persistent relay task depending
+on its left neighbour's ``token`` channel.  Termination is the
+unmodified Mattern detector speaking CONTROL messages across process
+boundaries.  The v2 ``Session`` owns spawn, rendezvous and teardown:
 
   PYTHONPATH=src python examples/net_pingpong.py
-  PYTHONPATH=src python -m repro.net.launch --ranks 4 examples/net_pingpong.py:main
+  PYTHONPATH=src python examples/net_pingpong.py --ranks 4 --procs 2
+  PYTHONPATH=src python examples/net_pingpong.py --transport inproc
 """
+import argparse
+
 from repro import edat
 
 N_HOPS = 200
+TOKEN = edat.Channel("token", payload=int)
 
 
 def relay(ctx, events):
     hops = events[0].data
     if hops < N_HOPS:
-        ctx.fire((ctx.rank + 1) % ctx.n_ranks, "token", hops + 1)
+        ctx.fire((ctx.rank + 1) % ctx.n_ranks, TOKEN, hops + 1)
 
 
 def main(ctx):
     left = (ctx.rank - 1) % ctx.n_ranks
-    ctx.submit_persistent(relay, deps=[(left, "token")], name="relay")
+    ctx.submit_persistent(relay, deps=[(left, TOKEN)], name="relay")
     if ctx.rank == 0:
-        ctx.fire(1, "token", 1)
+        ctx.fire(1, TOKEN, 1)
 
 
 if __name__ == "__main__":
-    stats = edat.launch_processes(4, main, timeout=60)
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--ranks", type=int, default=4)
+    ap.add_argument("--procs", type=int, default=None,
+                    help="OS processes to pack the ranks into "
+                         "(default: one per rank)")
+    ap.add_argument("--transport", choices=("inproc", "socket"),
+                    default="socket")
+    a = ap.parse_args()
+    with edat.Session(a.ranks, procs=a.procs, transport=a.transport,
+                      timeout=60) as s:
+        s.run(main)
+        stats = s.stats
     hops_per_s = N_HOPS / stats["run_seconds"]
-    print(f"ring of 4 processes, {N_HOPS} hops in "
+    print(f"ring of {a.ranks} ranks ({a.transport}), {N_HOPS} hops in "
           f"{stats['run_seconds']:.3f}s ({hops_per_s:.0f} hops/s); "
           f"stats={stats}")

@@ -138,9 +138,9 @@ def main():
             feeder(ctx, [])   # kick off step 0
         state[r] = params
 
-    rt = edat.Runtime(S, workers_per_rank=1, unconsumed="ignore")
     t0 = time.monotonic()
-    rt.run(main_fn, timeout=600)
+    edat.run(main_fn, ranks=S, workers_per_rank=1,
+             unconsumed="ignore", timeout=600)
     dt = time.monotonic() - t0
     per_step = [np.mean(losses[i * M:(i + 1) * M])
                 for i in range(args.steps)]

@@ -7,14 +7,19 @@ task3 (rank 1) consumes one event from each and prints the sum.
 """
 from repro import edat
 
+# typed channels (v2): typos fail fast, payload types are checked at fire
+EVENT1 = edat.Channel("event1")
+EVENT2 = edat.Channel("event2", payload=int)
+EVENT3 = edat.Channel("event3", payload=int)
+
 
 def task1(ctx, events):
-    ctx.fire(1, "event1")                 # no payload (EDAT_NONE)
-    ctx.fire(1, "event2", 33)             # one integer payload
+    ctx.fire(1, EVENT1)                   # no payload (EDAT_NONE)
+    ctx.fire(1, EVENT2, 33)               # one integer payload
 
 
 def task2(ctx, events):
-    ctx.fire(edat.SELF, "event3", 100)    # EDAT_SELF target
+    ctx.fire(edat.SELF, EVENT3, 100)      # EDAT_SELF target
 
 
 def task3(ctx, events):
@@ -27,11 +32,10 @@ def main(ctx):
     if ctx.rank == 0:
         ctx.submit(task1)                                  # no dependencies
     elif ctx.rank == 1:
-        ctx.submit(task2, deps=[(0, "event1")])
-        ctx.submit(task3, deps=[(0, "event2"), (1, "event3")])
+        ctx.submit(task2, deps=[(0, EVENT1)])
+        ctx.submit(task3, deps=[(0, EVENT2), (1, EVENT3)])
 
 
 if __name__ == "__main__":
-    rt = edat.Runtime(n_ranks=2, workers_per_rank=2)
-    stats = rt.run(main)
+    stats = edat.run(main, ranks=2, workers_per_rank=2)
     print(f"terminated cleanly: {stats}")

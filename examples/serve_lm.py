@@ -135,9 +135,9 @@ def main():
                               0, cfg.vocab, size=4).tolist()})
                 time.sleep(float(rng.random()) * 0.05)
 
-    rt = edat.Runtime(n_ranks, workers_per_rank=2, unconsumed="ignore")
     t0 = time.monotonic()
-    rt.run(main_fn, timeout=600)
+    edat.run(main_fn, ranks=n_ranks, workers_per_rank=2,
+             unconsumed="ignore", timeout=600)
     dt = time.monotonic() - t0
     n_tokens = sum(len(r["tokens"]) for r in got)
     print(f"served {len(got)} requests / {n_tokens} tokens in {dt:.2f}s "

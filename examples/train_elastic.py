@@ -1,10 +1,11 @@
 """Elastic event-driven training — in one process or across many.
 
-The same EventDrivenTrainer attaches to threads-as-ranks or to spawned OS
-processes (several ranks per process over the coalescing socket
-transport); with ``--kill`` one process is SIGKILLed mid-run and the
-co-located survivors roll back to the last durable checkpoint, re-shard,
-and finish (the paper's §VII RANK_FAILED story, for real processes).
+The same EventDrivenTrainer program attaches to threads-as-ranks or to
+spawned OS processes (several ranks per process over the coalescing
+socket transport); with ``--kill`` one process is SIGKILLed mid-run and
+the co-located survivors roll back to the last durable checkpoint,
+re-shard, and finish (the paper's §VII RANK_FAILED story, for real
+processes).  Everything runs through the v2 ``edat.Session``:
 
     PYTHONPATH=src python examples/train_elastic.py                # threads
     PYTHONPATH=src python examples/train_elastic.py --transport socket \
@@ -13,13 +14,12 @@ and finish (the paper's §VII RANK_FAILED story, for real processes).
         --ranks 4 --procs 2 --kill                                 # chaos
 """
 import argparse
-import functools
 import os
 import tempfile
 import time
 
-from repro.runtime_dist.trainer import (_demo_cfgs, _spawned_trainer_main,
-                                        load_distributed_results)
+from repro import edat
+from repro.runtime_dist.trainer import _demo_cfgs, trainer_program
 
 
 def main():
@@ -41,41 +41,37 @@ def main():
             a.ranks, a.steps, ckdir, ckpt_every=3)
 
         if a.transport == "inproc":
-            from repro.models import build_model
-            from repro.runtime_dist import EventDrivenTrainer
-            tr = EventDrivenTrainer(build_model(model_cfg), data_cfg,
-                                    opt_cfg, trainer_cfg)
+            tr = trainer_program(model_cfg, data_cfg, opt_cfg, trainer_cfg)
             out = tr.run(timeout=600)
             hist = out["history"]
         else:
             from repro.checkpoint import latest_step
-            from repro.net.launch import ProcessGroup
-            outdir = os.path.join(td, "out")
-            pg = ProcessGroup(
-                a.ranks,
-                functools.partial(_spawned_trainer_main,
-                                  model_cfg=model_cfg, data_cfg=data_cfg,
-                                  opt_cfg=opt_cfg, trainer_cfg=trainer_cfg,
-                                  out_dir=outdir),
-                n_procs=a.procs, run_timeout=600,
-                workers_per_rank=trainer_cfg.workers_per_rank,
-                unconsumed="ignore", hb_interval=0.2, hb_timeout=1.5)
-            pg.start()
-            if a.kill:
-                deadline = time.monotonic() + 300
-                while ((latest_step(ckdir) or 0) < 3
-                       and time.monotonic() < deadline):
-                    if not any(p.is_alive() for p in pg._procs.values()):
-                        raise SystemExit(
-                            "children exited before the first checkpoint")
-                    time.sleep(0.05)
-                if (latest_step(ckdir) or 0) < 3:
-                    raise SystemExit("no checkpoint appeared within 300s")
-                victim = a.ranks - 1
-                print(f"== SIGKILL the process hosting rank {victim} ==")
-                pg.kill(victim)
-            pg.wait(600, check=not a.kill)
-            res = load_distributed_results(outdir)
+            with edat.Session(a.ranks, procs=a.procs, transport="socket",
+                              timeout=600,
+                              workers_per_rank=trainer_cfg.workers_per_rank,
+                              unconsumed="ignore", hb_interval=0.2,
+                              hb_timeout=1.5) as s:
+                s.start(edat.deferred(trainer_program, model_cfg, data_cfg,
+                                      opt_cfg, trainer_cfg))
+                if a.kill:
+                    deadline = time.monotonic() + 300
+                    while ((latest_step(ckdir) or 0) < 3
+                           and time.monotonic() < deadline):
+                        if all(c is not None
+                               for c in s.exitcodes().values()):
+                            raise SystemExit(
+                                "children exited before the first "
+                                "checkpoint")
+                        time.sleep(0.05)
+                    if (latest_step(ckdir) or 0) < 3:
+                        raise SystemExit("no checkpoint appeared within "
+                                         "300s")
+                    victim = a.ranks - 1
+                    print(f"== SIGKILL the process hosting rank {victim} "
+                          f"==")
+                    s.kill(victim)
+                s.wait(600, check=not a.kill)
+                res = s.gather()
             hist = res["history"]
             for r in res["recoveries"]:
                 print(f"rank {r['rank']}: rolled back to step {r['step']} "

@@ -1,2 +1,2 @@
 from .insitu import (InsituCfg, EdatAnalytics, BespokeAnalytics,
-                     distributed_insitu)
+                     distributed_insitu, insitu_program)

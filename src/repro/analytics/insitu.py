@@ -22,14 +22,14 @@ the design the paper replaced.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import threading
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro import edat
+from repro.core.deprecation import warn_deprecated
 
 
 @dataclasses.dataclass
@@ -50,15 +50,19 @@ class EdatAnalytics:
     """1:1 computational:analytics ranks (paper's benchmark setup):
     ranks [0, n) are analytics, ranks [n, 2n) are computational.
 
-    Attaches to *any* SPMD context via :meth:`start`, so the pipeline runs
-    threads-as-ranks in one process (:meth:`run`) or one rank per OS
-    process over ``repro.net.SocketTransport``
-    (:func:`distributed_insitu`).  Each analytics rank knows upfront how
-    many (field, timestep) reductions it roots; when its writer federator
-    has consumed them all it fires one ``insitu_done`` event, and a
-    transitory gather task on rank 0 folds those into ``self.summary``
-    (result count + mean latency) — the cross-process replacement for
-    reading ``self.results`` from shared memory."""
+    A v2 ``edat.Program`` over ``2 * cfg.n_analytics`` ranks: declares
+    its typed channels (including the per-(field, timestep) reduction
+    channels, which are enumerable upfront from the config), attaches to
+    *any* SPMD context via :meth:`start`, and reports through
+    :meth:`result` — so the pipeline runs threads-as-ranks (:meth:`run`)
+    or across OS processes (``edat.run(edat.deferred(insitu_program,
+    cfg_kw), ranks=2n, transport="socket")``).  Each analytics rank
+    knows upfront how many (field, timestep) reductions it roots; when
+    its writer federator has consumed them all it fires one
+    ``insitu_done`` event, and a transitory gather task on rank 0 folds
+    those into ``self.summary`` (result count + mean latency) — the
+    cross-process replacement for reading ``self.results`` from shared
+    memory."""
 
     def __init__(self, cfg: InsituCfg, workers_per_rank: int = 4):
         self.cfg = cfg
@@ -74,6 +78,26 @@ class EdatAnalytics:
         #: called (on rank 0's process) with the summary dict
         self.on_summary = None
 
+    @property
+    def channels(self) -> Sequence[edat.Channel]:
+        """The pipeline's typed event vocabulary, enumerable upfront: the
+        registration/data/completion channels plus one reduction channel
+        per (field, timestep) pair."""
+        cfg = self.cfg
+        per_field = cfg.items_per_producer // cfg.n_fields
+        chans = [edat.Channel("register", payload=int),
+                 edat.Channel("field", payload=dict),
+                 edat.Channel("dereg", payload=int),
+                 edat.Channel("insitu_done", payload=dict)]
+        chans += [edat.Channel(f"partial.{fid}.{ts}", payload=dict)
+                  for fid in range(cfg.n_fields)
+                  for ts in range(per_field)]
+        return chans
+
+    def result(self) -> Optional[Dict[str, float]]:
+        """Gathered output (rank 0's process): the reduction summary."""
+        return self.summary
+
     def expected_roots(self, rank: int) -> int:
         """How many (field, timestep) reductions ``rank`` roots."""
         cfg = self.cfg
@@ -83,13 +107,13 @@ class EdatAnalytics:
                    if (fid + ts) % cfg.n_analytics == rank)
 
     def run(self) -> Dict[str, float]:
-        """In-proc convenience: all 2n ranks as threads in one Runtime."""
+        """In-proc convenience: all 2n ranks as threads in one Session."""
         cfg = self.cfg
         n = cfg.n_analytics
-        rt = edat.Runtime(2 * n, workers_per_rank=self.workers,
-                          unconsumed="error")
         self.t0 = time.monotonic()
-        rt.run(self.start, timeout=600)
+        with edat.Session(2 * n, workers_per_rank=self.workers,
+                          unconsumed="error", timeout=600) as s:
+            s.run(self)
         dt = time.monotonic() - self.t0
         raw = cfg.n_analytics * cfg.items_per_producer
         lat = np.mean([r[1] for r in self.results]) if self.results else 0
@@ -205,48 +229,54 @@ class EdatAnalytics:
 
 
 # ------------------------------------------------- distributed (processes)
-def _spawned_insitu_main(ctx: edat.Context, *, cfg_kw: Dict,
-                         out_path: Optional[str] = None) -> None:
-    """SPMD entry point for ``edat.launch_processes``: 2n processes, one
-    rank each (analytics [0, n), computational [n, 2n)).  Rank 0's process
-    writes the gathered summary as JSON to ``out_path``."""
-    import json
-    cfg = InsituCfg(**cfg_kw)
-    ea = EdatAnalytics(cfg)
-    if ctx.rank == 0 and out_path:
-        def _save(summary: Dict[str, float]) -> None:
-            with open(out_path, "w") as f:
-                json.dump(summary, f)
-        ea.on_summary = _save
-    ea.start(ctx)
+def insitu_program(cfg_kw: Dict, workers_per_rank: int = 4
+                   ) -> EdatAnalytics:
+    """Program factory for ``edat.run``/``Session`` (wrap in
+    ``edat.deferred`` so each spawned process builds its own pipeline):
+    2n ranks, analytics [0, n) and computational [n, 2n)."""
+    return EdatAnalytics(InsituCfg(**cfg_kw), workers_per_rank)
 
 
-def distributed_insitu(cfg: InsituCfg, timeout: float = 180.0,
-                       **launch_kwargs) -> Dict[str, float]:
-    """Run the in-situ analytics pipeline with one OS process per rank
-    (2 * ``cfg.n_analytics`` processes) over ``SocketTransport``; returns
-    the same metrics dict as :meth:`EdatAnalytics.run`, with bandwidth
-    computed from the in-child ``run_seconds``."""
+def _distributed_insitu(cfg: InsituCfg, timeout: float = 180.0,
+                        **launch_kwargs) -> Dict[str, float]:
+    """Session-backed distributed run returning the v1-shaped metrics
+    dict (bandwidth from the in-child ``run_seconds``).  Shared by the
+    deprecation shim and the benchmarks."""
     import dataclasses as _dc
-    import json
-    import os
-    import tempfile
-
-    from repro.net.launch import launch_processes
-    with tempfile.TemporaryDirectory() as td:
-        out = os.path.join(td, "insitu_summary.json")
-        stats = launch_processes(
-            2 * cfg.n_analytics,
-            functools.partial(_spawned_insitu_main,
-                              cfg_kw=_dc.asdict(cfg), out_path=out),
-            timeout=timeout, **launch_kwargs)
-        with open(out) as f:
-            summary = json.load(f)
+    # default matches the v1 helper (children ran the Runtime default of
+    # one worker per rank) — the benchmark baselines depend on it
+    workers = launch_kwargs.pop("workers_per_rank", 1)
+    # v1 launcher kwargs that moved in v2: keep the old contract working
+    procs = launch_kwargs.pop("n_procs", None)
+    check = launch_kwargs.pop("check", True)
+    join_timeout = launch_kwargs.pop("join_timeout", None)
+    with edat.Session(2 * cfg.n_analytics, procs=procs,
+                      transport="socket", timeout=timeout,
+                      workers_per_rank=workers, **launch_kwargs) as s:
+        s.start(edat.deferred(insitu_program, _dc.asdict(cfg), workers))
+        s.wait(join_timeout, check=check)
+        summary = s.gather()
+        stats = s.stats
     raw = cfg.n_analytics * cfg.items_per_producer
     dt = max(float(stats.get("run_seconds", 0.0)), 1e-9)
     return {"raw_items": raw, "results": int(summary["results"]),
             "seconds": dt, "bandwidth_items_s": raw / dt,
             "mean_latency_s": float(summary["mean_latency_s"])}
+
+
+def distributed_insitu(cfg: InsituCfg, timeout: float = 180.0,
+                       **launch_kwargs) -> Dict[str, float]:
+    """Deprecated v1 helper — use the v2 Session API::
+
+        edat.run(edat.deferred(insitu_program, dataclasses.asdict(cfg)),
+                 ranks=2 * cfg.n_analytics, transport="socket")
+
+    Returns the same metrics dict as :meth:`EdatAnalytics.run`, with
+    bandwidth computed from the in-child ``run_seconds``."""
+    warn_deprecated(
+        "distributed_insitu is deprecated: use edat.run(edat.deferred("
+        "insitu_program, ...), ranks=2*n, transport='socket')")
+    return _distributed_insitu(cfg, timeout, **launch_kwargs)
 
 
 # ---------------------------------------------------------------- baseline

@@ -39,6 +39,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
+from .deprecation import warn_deprecated
 from .event import (ALL, ANY, SELF, RANK_FAILED, SYS_PREFIX, TIMER_CANCELLED,
                     Dep, Event, copy_payload)
 from .scheduler import Scheduler
@@ -69,6 +70,32 @@ class TimerHandle:
         return self._rt._cancel_timer(self.tid)
 
 
+class TaskHandle:
+    """Handle for a submitted task (v2 API): returned by ``ctx.submit`` /
+    ``ctx.submit_persistent``.  ``remove()`` deregisters a *named* task
+    (the paper's ``edatRemoveTask``); unnamed handles return False."""
+
+    __slots__ = ("_sched", "rank", "name", "persistent")
+
+    def __init__(self, sched: "Scheduler", name: Optional[str],
+                 persistent: bool):
+        self._sched = sched
+        self.rank = sched.rank
+        self.name = name
+        self.persistent = persistent
+
+    def remove(self) -> bool:
+        """Remove the task from its rank's registry.  True iff it was
+        still registered (requires the task to have been named)."""
+        if self.name is None:
+            return False
+        return self._sched.remove_task(self.name)
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        kind = "persistent" if self.persistent else "task"
+        return f"TaskHandle({kind} {self.name!r} on rank {self.rank})"
+
+
 class Context:
     """Per-rank public API — mirrors the paper's C API Pythonically.
 
@@ -93,18 +120,81 @@ class Context:
         self._rt = runtime
         self.rank = rank
         self.n_ranks = runtime.n_ranks
+        #: declared channel table ({eid: Channel-or-None}), or None (no
+        #: enforcement).  Set by :meth:`declare_channels` when a v2
+        #: ``Program`` declares its typed channels.
+        self._declared: Optional[Dict[str, Any]] = None
+
+    # -- channels ------------------------------------------------------------
+    def declare_channels(self, channels: Sequence[Any]) -> None:
+        """Declare this rank's event vocabulary (v2 typed channels).
+
+        Once declared, firing or depending on an *undeclared* event id
+        raises ``KeyError`` immediately at the call site — the fast
+        replacement for the silent never-matching typo of stringly-typed
+        eids — and fires on a declared *typed* channel are payload-type
+        checked even when addressed by the raw id string.  Ids starting
+        with ``"__"`` (runtime-internal and machine-generated events,
+        collective-pattern eids) are exempt."""
+        self._declared = {str(c): (c if hasattr(c, "validate") else None)
+                          for c in channels}
+
+    def _check_eid(self, eid: str) -> None:
+        d = self._declared
+        if d is not None and eid not in d and not eid.startswith("__"):
+            raise KeyError(
+                f"event id {eid!r} is not a declared channel of this "
+                f"program (declared: {sorted(d)})")
+
+    def _check_fire(self, eid: str, data: Any) -> None:
+        """Declared-vocabulary enforcement for one fire: unknown id ->
+        KeyError (via :meth:`_check_eid`, the one source of truth for the
+        exemption rule); declared typed channel -> payload validation
+        (also for raw-string addressing)."""
+        self._check_eid(eid)
+        ch = self._declared.get(eid)
+        if ch is not None:
+            ch.validate(data)
+
+    def _pre_fire(self, eid: str, data: Any) -> None:
+        """The one guard every fire path (fire / fire_batch / fire_after)
+        runs: declared vocabulary enforcement when the program declared
+        channels, else duck-typed payload validation for a typed Channel
+        eid (a ``validate`` attribute — the core never imports
+        :mod:`repro.api`).  Plain-string fires without a declaration stay
+        check-free."""
+        if self._declared is not None:
+            self._check_fire(eid, data)
+        elif type(eid) is not str:
+            validate = getattr(eid, "validate", None)
+            if validate is not None:
+                validate(data)
+
+    def _check_deps(self, deps: List[Dep]) -> List[Dep]:
+        """Declared-vocabulary check for dependency eids (submit / wait /
+        retrieve_any paths); returns ``deps`` for call-site chaining."""
+        if self._declared is not None:
+            for dp in deps:
+                self._check_eid(dp.eid)
+        return deps
 
     # -- tasks ---------------------------------------------------------------
     def submit(self, fn: Callable, deps: Sequence[DepLike] = (),
-               name: Optional[str] = None) -> None:
-        self._rt._sched[self.rank].submit(fn, _deps(deps), name, False)
+               name: Optional[str] = None) -> TaskHandle:
+        d = self._check_deps(_deps(deps))
+        sched = self._rt._sched[self.rank]
+        sched.submit(fn, d, name, False)
+        return TaskHandle(sched, name, False)
 
     def submit_persistent(self, fn: Callable, deps: Sequence[DepLike],
-                          name: Optional[str] = None) -> None:
+                          name: Optional[str] = None) -> TaskHandle:
         d = _deps(deps)
         if not d:
             raise ValueError("a persistent task needs >= 1 dependency")
-        self._rt._sched[self.rank].submit(fn, d, name, True)
+        self._check_deps(d)
+        sched = self._rt._sched[self.rank]
+        sched.submit(fn, d, name, True)
+        return TaskHandle(sched, name, True)
 
     def remove_task(self, name: str) -> bool:
         return self._rt._sched[self.rank].remove_task(name)
@@ -114,6 +204,7 @@ class Context:
              persistent: bool = False, ref: bool = False) -> None:
         if eid.startswith(SYS_PREFIX):
             raise ValueError(f"EIDs starting with {SYS_PREFIX!r} are reserved")
+        self._pre_fire(eid, data)
         self._rt._fire(self.rank, target, eid, data,
                        persistent=persistent, ref=ref)
 
@@ -127,22 +218,27 @@ class Context:
         preserved across the batch).
         """
         for f in fires:
-            if f[1].startswith(SYS_PREFIX):
+            eid = f[1]
+            if eid.startswith(SYS_PREFIX):
                 raise ValueError(
                     f"EIDs starting with {SYS_PREFIX!r} are reserved")
+            self._pre_fire(eid, f[2] if len(f) > 2 else None)
         self._rt._fire_batch(self.rank, fires, persistent=persistent, ref=ref)
 
     def fire_after(self, delay: float, target: Any, eid: str,
                    data: Any = None) -> TimerHandle:
         """Machine-generated timer event (paper §VII further work)."""
+        self._pre_fire(eid, data)
         return self._rt._fire_after(self.rank, delay, target, eid, data)
 
     # -- pause / poll ----------------------------------------------------------
     def wait(self, deps: Sequence[DepLike]) -> List[Event]:
-        return self._rt._sched[self.rank].wait(_deps(deps))
+        return self._rt._sched[self.rank].wait(
+            self._check_deps(_deps(deps)))
 
     def retrieve_any(self, deps: Sequence[DepLike]) -> List[Event]:
-        return self._rt._sched[self.rank].retrieve_any(_deps(deps))
+        return self._rt._sched[self.rank].retrieve_any(
+            self._check_deps(_deps(deps)))
 
     # -- locks -----------------------------------------------------------------
     def lock(self, name: str) -> None:
@@ -578,6 +674,17 @@ class Runtime:
     # ------------------------------------------------------------------ run
     def run(self, main: Callable[[Context], None],
             timeout: float = 120.0) -> Dict[str, Any]:
+        """Deprecated v1 entry point — use ``edat.run(main, ranks=...)``
+        or ``edat.Session`` (the v2 API), which owns runtime construction
+        and teardown.  Behaviour is unchanged; a DeprecationWarning is
+        emitted once per call site."""
+        warn_deprecated(
+            "Runtime.run is deprecated: start programs through "
+            "edat.run(program, ranks=...) or edat.Session (the v2 API)")
+        return self._run_internal(main, timeout=timeout)
+
+    def _run_internal(self, main: Callable[[Context], None],
+                      timeout: float = 120.0) -> Dict[str, Any]:
         """Run ``main(ctx)`` SPMD on every local rank; return when the
         paper's four termination conditions (§II.E) hold globally.
         Equivalent to ``edatInit(); main(); edatFinalise()``.  With a

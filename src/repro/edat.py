@@ -1,8 +1,12 @@
-"""Convenience alias: ``from repro import edat``."""
-from repro.core import *  # noqa: F401,F403
-from repro.core import __all__ as _core_all
-from repro.net import (ProcessGroup, SocketTransport,  # noqa: F401
-                       launch_processes)
+"""``from repro import edat`` — the public facade (v2).
 
-__all__ = list(_core_all) + ["ProcessGroup", "SocketTransport",
-                             "launch_processes"]
+Everything lives in :mod:`repro.api`: ``Session``/``run`` (the one way
+programs start), typed ``Channel``\\ s, the ``Program`` protocol,
+driver-side ``Future``\\ s, collective patterns, timers, and the core /
+distribution re-exports.  The v1 entry points (``Runtime.run``,
+``distributed_*``) remain importable but emit DeprecationWarnings.
+"""
+from repro.api import *  # noqa: F401,F403
+from repro.api import __all__ as _api_all
+
+__all__ = list(_api_all)

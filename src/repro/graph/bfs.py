@@ -8,15 +8,21 @@ FIFO guarantee — the level barrier is *implicit in the event matching*,
 no global synchronisation call exists.  Per-rank frontier expansion is
 vectorised numpy (the TPU-native adaptation: batch the per-vertex handler).
 
-The BFS attaches to *any* SPMD context via :meth:`EdatBFS.start`, so the
-same code runs threads-as-ranks in one process (:meth:`EdatBFS.run`, the
-in-proc convenience) or one rank per OS process over
-``repro.net.SocketTransport`` (:func:`distributed_bfs`, which wraps
-``edat.launch_processes``).  On convergence every rank fires its parent
-fragment to rank 0 (``ref=True`` — ownership handover, so the coalescing
-socket transport ships the numpy frontier zero-copy); a transitory gather
-task on rank 0 assembles the full parent array.  Level batches are also
-fired ``ref=True`` for the same reason.
+:class:`EdatBFS` is a v2 ``edat.Program``: it declares its typed event
+channels, attaches to any SPMD context via :meth:`EdatBFS.start`, and
+returns its gathered output through :meth:`EdatBFS.result` — so the same
+code runs threads-as-ranks (:meth:`EdatBFS.run`, the in-proc
+convenience) or across OS processes::
+
+    res = edat.run(edat.deferred(bfs_program, n_ranks, scale=12, root=5),
+                   ranks=n_ranks, transport="socket")
+
+(:func:`bfs_program` rebuilds the Kronecker graph deterministically in
+each spawned process — no broadcast needed.)  On convergence every rank
+fires its parent fragment to rank 0 (``ref=True`` — ownership handover,
+so the coalescing socket transport ships the numpy frontier zero-copy);
+a transitory gather task on rank 0 assembles the full parent array.
+Level batches are also fired ``ref=True`` for the same reason.
 
 Reference version: classic BSP level-synchronous BFS — compute, exchange,
 explicit global barrier per level (threading.Barrier standing in for
@@ -24,9 +30,6 @@ MPI_Alltoallv + barrier).
 """
 from __future__ import annotations
 
-import functools
-import os
-import tempfile
 import threading
 import time
 from typing import Callable, Dict, List, Optional, Tuple
@@ -34,30 +37,40 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro import edat
+from repro.core.deprecation import warn_deprecated
 from .kronecker import PartitionedCSR, build_csr, kronecker_edges
+
+#: typed event channels of the BFS program (v2 API)
+VISIT = edat.Channel("visit", payload=dict)
+BFS_PARENTS = edat.Channel("bfs_parents", payload=dict)
 
 
 # --------------------------------------------------------------- EDAT BFS
 class EdatBFS:
-    """Event-driven BFS over a partitioned CSR.
+    """Event-driven BFS over a partitioned CSR — an ``edat.Program``.
 
-    ``run(root)`` owns an in-proc Runtime (threads-as-ranks); for a
-    distributed run, call ``start(ctx, root)`` from the SPMD main of every
-    participating process — each process hosts ``transport.local_ranks``
-    and the event flow is identical.  The assembled parent array lands in
-    ``self.result`` on the process hosting rank 0 (and is passed to
-    ``on_result`` if set)."""
+    ``run(root)`` owns an in-proc Session (threads-as-ranks); for a
+    distributed run hand the program (usually via
+    ``edat.deferred(bfs_program, ...)``) to ``edat.run``/``Session`` —
+    each process hosts ``transport.local_ranks`` and the event flow is
+    identical.  The assembled parent array lands in ``self.result_parent``
+    on the process hosting rank 0 (returned by :meth:`result`, and passed
+    to ``on_result`` if set)."""
+
+    channels = (VISIT, BFS_PARENTS)
 
     def __init__(self, csr: PartitionedCSR, workers_per_rank: int = 1,
-                 progress: str = "thread"):
+                 progress: str = "thread", root: Optional[int] = None):
         self.csr = csr
         self.workers = workers_per_rank
         self.progress = progress
+        #: default traversal root for start(ctx) (the Program protocol)
+        self.root = root
         self.parent: List[Optional[np.ndarray]] = [None] * csr.n_ranks
         self.traversed = [0] * csr.n_ranks
         self.levels = [0] * csr.n_ranks
         #: full parent array, assembled by rank 0's gather task
-        self.result: Optional[np.ndarray] = None
+        self.result_parent: Optional[np.ndarray] = None
         #: called (on rank 0's process) as on_result(parent, traversed)
         self.on_result: Optional[Callable[[np.ndarray, List[int]], None]] \
             = None
@@ -67,23 +80,36 @@ class EdatBFS:
         self.stall: Optional[Tuple[int, int, float, Optional[str]]] = None
 
     def run(self, root: int, timeout: float = 600.0) -> np.ndarray:
-        """In-proc convenience: all ranks as threads in one Runtime."""
-        rt = edat.Runtime(self.csr.n_ranks, workers_per_rank=self.workers,
-                          progress=self.progress, unconsumed="error")
-        self._rt = rt
-        rt.run(lambda ctx: self.start(ctx, root), timeout=timeout)
-        return self.result
+        """In-proc convenience: all ranks as threads in one Session."""
+        self.root = root
+        with edat.Session(self.csr.n_ranks,
+                          workers_per_rank=self.workers,
+                          progress=self.progress, unconsumed="error",
+                          timeout=timeout) as s:
+            self._rt = s.runtime
+            s.run(self)
+        return self.result_parent
 
-    def start(self, ctx: edat.Context, root: int) -> None:
+    def result(self) -> Dict[str, object]:
+        """Gathered output (rank 0's process): the assembled parent array
+        plus per-rank traversed-edge counts."""
+        return {"parent": self.result_parent,
+                "traversed": list(self.traversed)}
+
+    def start(self, ctx: edat.Context, root: Optional[int] = None) -> None:
         """Attach the BFS to one rank of any (in-proc or distributed)
         runtime: submit the visit/gather/fail-stop tasks and fire the
         level-0 seed batches."""
         csr = self.csr
+        root = self.root if root is None else root
+        if root is None:
+            raise ValueError("no BFS root: pass start(ctx, root) or set "
+                             "EdatBFS(..., root=)")
         lo, hi = csr.local_range(ctx.rank)
         self.parent[ctx.rank] = np.full(hi - lo, -1, np.int64)
 
         ctx.submit_persistent(self._visit_task,
-                              deps=[(edat.ALL, "visit")], name="visit")
+                              deps=[(edat.ALL, VISIT)], name="visit")
         # fail-stop: without this, survivors of a mid-traversal rank loss
         # would idle forever inside the ALL-dependency (the dead rank's
         # level batch never arrives); raising turns RANK_FAILED into a
@@ -93,7 +119,7 @@ class EdatBFS:
                               name="bfs-failstop")
         if ctx.rank == 0:
             ctx.submit(self._gather_task,
-                       deps=[(r, "bfs_parents")
+                       deps=[(r, BFS_PARENTS)
                              for r in range(ctx.n_ranks)], name="gather")
         # level 0: everyone fires its (mostly empty) seed batch
         if csr.owner(np.int64(root)) == ctx.rank:
@@ -120,7 +146,7 @@ class EdatBFS:
             lo, hi = self.csr.local_range(d["rank"])
             out[lo:hi] = d["parent"]
             self.traversed[d["rank"]] = int(d["traversed"])
-        self.result = out
+        self.result_parent = out
         if self.on_result is not None:
             self.on_result(out, list(self.traversed))
 
@@ -190,61 +216,78 @@ class EdatBFS:
 
 
 # ------------------------------------------------- distributed (processes)
-def _spawned_bfs_main(ctx: edat.Context, *, scale: int, edgefactor: int,
-                      seed: int, root: int, out_path: Optional[str] = None,
-                      stall=None, ready_path: Optional[str] = None) -> None:
-    """SPMD entry point for ``edat.launch_processes``: every process
-    regenerates the same Kronecker graph deterministically (no broadcast
-    needed), partitions it over ``ctx.n_ranks``, and attaches the BFS.
-    Rank 0's process saves the gathered result to ``out_path`` (.npz with
-    ``parent`` and per-rank ``traversed``)."""
+def bfs_program(n_ranks: int, scale: int, edgefactor: int = 16,
+                seed: int = 20, root: int = 0, *, workers_per_rank: int = 1,
+                stall=None, ready_path: Optional[str] = None) -> EdatBFS:
+    """Program factory for ``edat.run``/``Session``: regenerates the
+    Kronecker graph deterministically (no broadcast needed — each
+    spawned process builds its own copy when wrapped in
+    ``edat.deferred``), partitions it over ``n_ranks``, and returns the
+    :class:`EdatBFS` program rooted at ``root``."""
     edges = kronecker_edges(scale, edgefactor, seed)
-    csr = build_csr(edges, 1 << scale, ctx.n_ranks)
-    bfs = EdatBFS(csr)
+    csr = build_csr(edges, 1 << scale, n_ranks)
+    bfs = EdatBFS(csr, workers_per_rank=workers_per_rank, root=root)
     if stall is not None:
         bfs.stall = (stall[0], stall[1], stall[2], ready_path)
-    if ctx.rank == 0 and out_path:
-        def _save(parent: np.ndarray, traversed: List[int]) -> None:
-            np.savez(out_path, parent=parent,
-                     traversed=np.asarray(traversed, np.int64))
-        bfs.on_result = _save
-    bfs.start(ctx, root)
+    return bfs
 
 
-def distributed_bfs(n_ranks: int, scale: int, edgefactor: int = 16,
-                    seed: int = 20, root: Optional[int] = None,
-                    timeout: float = 120.0, **launch_kwargs):
-    """Run the event-driven BFS with one OS process per rank over
-    ``SocketTransport`` and return ``(parent, info)``: the assembled
-    parent array plus run stats (``run_seconds``, ``teps``,
-    ``events_per_s`` — all-rank user events/s incl. SELF loopback fires —
-    ``traversed``, ``root``).  Extra kwargs reach
-    :func:`repro.net.launch.launch_processes` (e.g. ``hb_interval``,
-    ``flush_interval``, ``workers_per_rank``)."""
-    from repro.net.launch import launch_processes
+def default_root(scale: int, edgefactor: int = 16, seed: int = 20) -> int:
+    """First vertex with nonzero degree (the Graph500 root rule)."""
+    edges = kronecker_edges(scale, edgefactor, seed)
+    n = 1 << scale
+    deg = np.bincount(np.concatenate([edges[0], edges[1]]), minlength=n)
+    return int(np.where(deg > 0)[0][0])
+
+
+def _distributed_bfs(n_ranks: int, scale: int, edgefactor: int = 16,
+                     seed: int = 20, root: Optional[int] = None,
+                     timeout: float = 120.0, **launch_kwargs):
+    """Session-backed distributed run returning ``(parent, info)`` in the
+    v1 shape.  Shared by the deprecation shim and the benchmarks."""
     if root is None:
-        # only the default-root derivation needs the graph in the parent
-        # (the spawned children regenerate it themselves)
-        edges = kronecker_edges(scale, edgefactor, seed)
-        n = 1 << scale
-        deg = np.bincount(np.concatenate([edges[0], edges[1]]), minlength=n)
-        root = int(np.where(deg > 0)[0][0])
-    with tempfile.TemporaryDirectory() as td:
-        out = os.path.join(td, "bfs_result.npz")
-        stats = launch_processes(
-            n_ranks,
-            functools.partial(_spawned_bfs_main, scale=scale,
+        root = default_root(scale, edgefactor, seed)
+    workers = launch_kwargs.pop("workers_per_rank", 1)
+    # v1 launcher kwargs that moved in v2: keep the old contract working
+    procs = launch_kwargs.pop("n_procs", None)
+    check = launch_kwargs.pop("check", True)
+    join_timeout = launch_kwargs.pop("join_timeout", None)
+    with edat.Session(n_ranks, procs=procs, transport="socket",
+                      timeout=timeout, workers_per_rank=workers,
+                      **launch_kwargs) as s:
+        s.start(edat.deferred(bfs_program, n_ranks, scale,
                               edgefactor=edgefactor, seed=seed, root=root,
-                              out_path=out),
-            timeout=timeout, **launch_kwargs)
-        dat = np.load(out)
-        parent = dat["parent"]
-        traversed = int(dat["traversed"].sum())
+                              workers_per_rank=workers))
+        s.wait(join_timeout, check=check)
+        res = s.gather()
+        stats = s.stats
+    parent = res["parent"]
+    traversed = int(np.sum(res["traversed"]))
     info = dict(stats)
     dt = max(float(stats.get("run_seconds", 0.0)), 1e-9)
     info.update(root=root, traversed=traversed, teps=traversed / dt,
                 events_per_s=stats.get("events_sent", 0) / dt)
     return parent, info
+
+
+def distributed_bfs(n_ranks: int, scale: int, edgefactor: int = 16,
+                    seed: int = 20, root: Optional[int] = None,
+                    timeout: float = 120.0, **launch_kwargs):
+    """Deprecated v1 helper — use the v2 Session API::
+
+        res = edat.run(edat.deferred(bfs_program, n_ranks, scale=scale,
+                                     root=root),
+                       ranks=n_ranks, transport="socket")
+
+    Returns ``(parent, info)`` exactly as before: the assembled parent
+    array plus run stats (``run_seconds``, ``teps``, ``events_per_s`` —
+    all-rank user events/s incl. SELF loopback fires — ``traversed``,
+    ``root``)."""
+    warn_deprecated(
+        "distributed_bfs is deprecated: use edat.run(edat.deferred("
+        "bfs_program, ...), ranks=..., transport='socket')")
+    return _distributed_bfs(n_ranks, scale, edgefactor, seed, root,
+                            timeout, **launch_kwargs)
 
 
 # ---------------------------------------------------------- BSP reference

@@ -2,7 +2,7 @@
 
 __all__ = ["EventDrivenTrainer", "QuorumCollector", "TrainerCfg",
            "distributed_train", "flatten_params",
-           "load_distributed_results"]
+           "load_distributed_results", "trainer_program"]
 
 
 def __getattr__(name):

@@ -1,10 +1,19 @@
 """Event-driven distributed trainer: EDAT as the coordination layer.
 
-Every JAX host is an EDAT rank.  The trainer *attaches* to any runtime via
-:meth:`EventDrivenTrainer.start` — the same code runs threads-as-ranks in
-one process (:meth:`EventDrivenTrainer.run`, the in-proc convenience) or
-SPMD across OS processes over ``repro.net.SocketTransport``
-(:func:`distributed_train`, which wraps ``edat.launch_processes``).  Each
+Every JAX host is an EDAT rank.  The trainer is a v2 ``edat.Program``:
+it declares its typed event channels, *attaches* to any runtime via
+:meth:`EventDrivenTrainer.start`, and reports gathered results through
+:meth:`EventDrivenTrainer.result` — the same code runs threads-as-ranks
+in one process (:meth:`EventDrivenTrainer.run`, the in-proc convenience)
+or SPMD across OS processes::
+
+    res = edat.run(edat.deferred(trainer_program, model_cfg, data_cfg,
+                                 opt_cfg, trainer_cfg),
+                   ranks=4, procs=2, transport="socket",
+                   unconsumed="ignore")
+
+(``edat.deferred`` builds one shared trainer per spawned process —
+co-located rank threads share the jitted step functions.)  Each
 process hosts ``transport.local_ranks`` trainer ranks; co-located ranks
 exchange gradient events in-process (no socket frames), remote ranks over
 the coalescing socket transport.  All inter-rank interactions are events —
@@ -55,8 +64,20 @@ import numpy as np
 
 from repro import edat
 from repro import checkpoint as ckpt_store
+from repro.core.deprecation import warn_deprecated
 from repro.data import DataCfg, SyntheticLM
 from repro.optim import OptCfg, make_optimizer
+
+#: typed event channels of the trainer program (v2 API); the runtime's
+#: ``__``-prefixed heartbeat plumbing eids are exempt from declaration
+CHANNELS = (edat.Channel("go", payload=int),
+            edat.Channel("grad", payload=dict),
+            edat.Channel("metric", payload=dict),
+            edat.Channel("ckpt", payload=dict),
+            edat.Channel("final", payload=dict),
+            edat.Channel("recover", payload=dict),
+            edat.Channel("suspect", payload=int),
+            edat.Channel("hb", payload=int))
 
 
 @dataclasses.dataclass
@@ -215,6 +236,7 @@ class EventDrivenTrainer:
         self.cfg = cfg
         self.history: List[Dict[str, Any]] = []
         self._hist_mu = threading.Lock()
+        self._world_mu = threading.Lock()
         self.states = [_RankState(r) for r in range(cfg.n_ranks)]
         self.runtime: Optional[edat.Runtime] = None
         self.ckpt_writes = 0
@@ -222,6 +244,8 @@ class EventDrivenTrainer:
         self.recoveries: List[Dict[str, int]] = []
         #: rank -> final parameter tree, gathered on rank 0's process
         self.final_params: Dict[int, Any] = {}
+        #: rank -> step its final event reported (same gather path)
+        self.final_steps: Dict[int, int] = {}
         #: called (on rank 0's process) with each rank's final payload
         self.on_final: Optional[Callable[[Dict[str, Any]], None]] = None
         #: called (on rank 0's process) after each metric is recorded
@@ -252,13 +276,29 @@ class EventDrivenTrainer:
         return payload
 
     # ------------------------------------------------------------ main SPMD
+    channels = CHANNELS
+
+    def result(self) -> Dict[str, Any]:
+        """Gathered output (rank 0's process), in transport-independent
+        currency: metric history, recoveries, and each reporting rank's
+        final parameters flattened to ``{path: numpy array}``."""
+        with self._hist_mu:
+            return {
+                "history": sorted(self.history, key=lambda m: m["step"]),
+                "recoveries": list(self.recoveries),
+                "final_params": {r: flatten_params(p)
+                                 for r, p in self.final_params.items()},
+                "final_steps": dict(self.final_steps),
+            }
+
     def run(self, timeout: float = 300.0) -> Dict[str, Any]:
-        """In-proc convenience: all ranks as threads in one Runtime."""
+        """In-proc convenience: all ranks as threads in one Session."""
         cfg = self.cfg
-        rt = edat.Runtime(cfg.n_ranks, workers_per_rank=cfg.workers_per_rank,
-                          unconsumed="ignore")
-        self.runtime = rt
-        rt.run(self.start, timeout=timeout)
+        with edat.Session(cfg.n_ranks,
+                          workers_per_rank=cfg.workers_per_rank,
+                          unconsumed="ignore", timeout=timeout) as s:
+            self.runtime = s.runtime
+            s.run(self)
         return {
             "history": sorted(self.history, key=lambda m: m["step"]),
             "final_params": [s.params for s in self.states],
@@ -282,12 +322,24 @@ class EventDrivenTrainer:
             st.opt_state = jax.tree.map(jnp.asarray, tree["opt"])
             st.step = step
 
+    def _ensure_world(self, n_ranks: int) -> None:
+        """Reconcile ``cfg.n_ranks`` with the session's actual rank count
+        (the session is authoritative — the v1 ``distributed_train``
+        helper did the same via ``dataclasses.replace``).  Must run
+        before any rank touches its state; racing rank threads are
+        serialised by the lock and later arrivals see a match."""
+        with self._world_mu:
+            if self.cfg.n_ranks != n_ranks:
+                self.cfg = dataclasses.replace(self.cfg, n_ranks=n_ranks)
+                self.states = [_RankState(r) for r in range(n_ranks)]
+
     def start(self, ctx: edat.Context) -> None:
         """Attach one rank of the trainer to any (in-proc or distributed)
         runtime: initialise that rank's replica, submit its persistent
         tasks, and fire the first chain token.  Rank 0 (wherever its
         process lives) additionally hosts the metric/checkpoint/final
         collectors and the heartbeat monitor."""
+        self._ensure_world(ctx.n_ranks)
         cfg = self.cfg
         self.runtime = ctx._rt
         st = self.states[ctx.rank]
@@ -466,6 +518,7 @@ class EventDrivenTrainer:
         p = events[0].data
         with self._hist_mu:
             self.final_params[p["rank"]] = p["params"]
+            self.final_steps[p["rank"]] = int(p["step"])
         hook = self.on_final
         if hook is not None:
             hook(p)
@@ -570,76 +623,82 @@ class EventDrivenTrainer:
 
 
 # ------------------------------------------------- distributed (processes)
-_SPAWN_MU = threading.Lock()
-_SPAWN_TRAINER: Optional[EventDrivenTrainer] = None
+def trainer_program(model_cfg, data_cfg, opt_cfg,
+                    trainer_cfg: TrainerCfg) -> EventDrivenTrainer:
+    """Program factory for ``edat.run``/``Session``: builds the model
+    and one :class:`EventDrivenTrainer`.  Wrap in ``edat.deferred`` so
+    each spawned process constructs its own trainer — co-located rank
+    threads then share the jitted step functions, and the unpicklable
+    parts (jit caches, locks) never cross a process boundary.
+    ``trainer_cfg.ckpt_dir`` must be on storage every process can reach —
+    it is both the async checkpoint sink and the recovery source when a
+    process dies."""
+    from repro.models import build_model
+    return EventDrivenTrainer(build_model(model_cfg), data_cfg, opt_cfg,
+                              trainer_cfg)
 
 
-def _write_json(path: str, obj) -> None:
-    # unique temp name: concurrent final events (one per finishing rank,
-    # possibly on different workers) must not steal each other's rename
-    import tempfile
-    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
-                               suffix=".tmp")
-    with os.fdopen(fd, "w") as f:
-        json.dump(obj, f)
-    os.replace(tmp, path)
+def distributed_train(n_ranks: int, model_cfg, data_cfg, opt_cfg,
+                      trainer_cfg: TrainerCfg, *,
+                      n_procs: Optional[int] = None,
+                      timeout: float = 300.0,
+                      out_dir: Optional[str] = None,
+                      **launch_kwargs) -> Dict[str, Any]:
+    """Deprecated v1 helper — use the v2 Session API::
 
+        res = edat.run(edat.deferred(trainer_program, model_cfg, data_cfg,
+                                     opt_cfg, trainer_cfg),
+                       ranks=n_ranks, procs=n_procs, transport="socket",
+                       unconsumed="ignore")
 
-def _attach_savers(trainer: EventDrivenTrainer, out_dir: str) -> None:
-    """Persistence hooks for spawned runs (rank-0's process): every final
-    event writes that rank's params as a flat .npz, and every metric OR
-    final event rewrites history/recoveries.  The metric-side rewrite
-    matters: _metric_task and _final_task are independent persistent
-    tasks, so with >1 worker a rank's final can execute before its last
-    metric — the metric's own rewrite then repairs the file.  Metrics
-    only trigger a rewrite once finals have started (the repair window):
-    the steady-state training path stays free of per-step file I/O."""
-    def write_logs() -> None:
-        with trainer._hist_mu:
-            hist = sorted(trainer.history, key=lambda m: m["step"])
-            rec = list(trainer.recoveries)
-        _write_json(os.path.join(out_dir, "history.json"), hist)
-        _write_json(os.path.join(out_dir, "recoveries.json"), rec)
-
-    def on_final(p: Dict[str, Any]) -> None:
-        np.savez(os.path.join(out_dir, f"final_rank{p['rank']}.npz"),
-                 step=np.int64(p["step"]), **flatten_params(p["params"]))
-        write_logs()
-
-    def on_metric(_m: Dict[str, Any]) -> None:
-        if trainer.final_params:
-            write_logs()
-
-    trainer.on_final = on_final
-    trainer.on_metric = on_metric
-
-
-def _spawned_trainer_main(ctx: edat.Context, *, model_cfg, data_cfg,
-                          opt_cfg, trainer_cfg,
-                          out_dir: Optional[str] = None) -> None:
-    """SPMD entry point for ``edat.launch_processes``: one shared
-    :class:`EventDrivenTrainer` per process (built lazily by whichever
-    local rank thread arrives first), attached per rank.  The process
-    hosting rank 0 persists history/recoveries/final params to
-    ``out_dir`` as they arrive, so the launcher parent can read the
-    results even though the trainer object dies with the child."""
-    global _SPAWN_TRAINER
-    with _SPAWN_MU:
-        tr = _SPAWN_TRAINER
-        if tr is None:
-            from repro.models import build_model
-            model = build_model(model_cfg)
-            tr = EventDrivenTrainer(model, data_cfg, opt_cfg, trainer_cfg)
-            if out_dir:
-                os.makedirs(out_dir, exist_ok=True)
-                _attach_savers(tr, out_dir)
-            _SPAWN_TRAINER = tr
-    tr.start(ctx)
+    Returns ``{"history", "recoveries", "final_params", "stats"}``
+    exactly as before (``final_params`` is ``{rank: {path: array}}``).
+    With ``out_dir`` the results are additionally persisted in the old
+    on-disk layout (history.json / recoveries.json / final_rank*.npz) —
+    written after a successful run; a run that fails before rank 0's
+    process finalizes leaves ``out_dir`` untouched (v1 wrote
+    incrementally and could leave partial files)."""
+    warn_deprecated(
+        "distributed_train is deprecated: use edat.run(edat.deferred("
+        "trainer_program, ...), ranks=..., procs=..., transport='socket')")
+    cfg = dataclasses.replace(trainer_cfg, n_ranks=n_ranks)
+    # v1 launcher kwargs that moved in v2: keep the old contract working
+    check = launch_kwargs.pop("check", True)
+    join_timeout = launch_kwargs.pop("join_timeout", None)
+    with edat.Session(n_ranks, procs=n_procs, transport="socket",
+                      timeout=timeout,
+                      workers_per_rank=cfg.workers_per_rank,
+                      unconsumed="ignore", **launch_kwargs) as s:
+        s.start(edat.deferred(trainer_program, model_cfg, data_cfg,
+                              opt_cfg, cfg))
+        s.wait(join_timeout, check=check)
+        gathered = s.gather()
+        res = dict(gathered or {"history": [], "recoveries": [],
+                                "final_params": {}})
+        res["stats"] = dict(s.stats)
+    # persist only real results: never clobber a previous run's files
+    # with empties when rank 0's process died before finalizing
+    if out_dir and gathered is not None:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, "history.json"), "w") as f:
+            json.dump(res["history"], f)
+        with open(os.path.join(out_dir, "recoveries.json"), "w") as f:
+            json.dump(res["recoveries"], f)
+        steps_by_rank = res.get("final_steps", {})
+        for r, flat in res["final_params"].items():
+            np.savez(os.path.join(out_dir, f"final_rank{r}.npz"),
+                     step=np.int64(steps_by_rank.get(r, 0)), **flat)
+    return res
 
 
 def load_distributed_results(out_dir: str) -> Dict[str, Any]:
-    """Read what a spawned trainer run left in ``out_dir``: ``history``,
+    """Deprecated v1 helper — results now come straight from
+    ``Session.gather()``.  Reads the old on-disk layout (which
+    ``distributed_train(out_dir=...)`` still writes): ``history``,
     ``recoveries``, and ``final_params`` ({rank: {path: array}})."""
+    warn_deprecated(
+        "load_distributed_results is deprecated: read results from "
+        "Session.gather() (edat.run returns them directly)")
     out: Dict[str, Any] = {"history": [], "recoveries": [],
                            "final_params": {}}
     hist = os.path.join(out_dir, "history.json")
@@ -659,52 +718,11 @@ def load_distributed_results(out_dir: str) -> Dict[str, Any]:
     return out
 
 
-def distributed_train(n_ranks: int, model_cfg, data_cfg, opt_cfg,
-                      trainer_cfg: TrainerCfg, *,
-                      n_procs: Optional[int] = None,
-                      timeout: float = 300.0,
-                      out_dir: Optional[str] = None,
-                      **launch_kwargs) -> Dict[str, Any]:
-    """Run the elastic trainer SPMD across OS processes over
-    ``SocketTransport`` and return ``{"history", "recoveries",
-    "final_params", "stats"}``.  ``n_procs`` packs several ranks per
-    process (co-located gradient exchange stays in-process); the model is
-    rebuilt from ``model_cfg`` inside each child.  ``trainer_cfg.ckpt_dir``
-    must be on storage every process can reach — it is both the async
-    checkpoint sink and the recovery source when a process dies.  Extra
-    kwargs go to :func:`repro.net.launch.launch_processes` (e.g.
-    ``hb_interval``, ``hb_timeout``, ``check``)."""
-    import functools
-    import tempfile
-    from repro.net.launch import launch_processes
-
-    cfg = dataclasses.replace(trainer_cfg, n_ranks=n_ranks)
-    own_tmp = out_dir is None
-    if own_tmp:
-        tmp_ctx = tempfile.TemporaryDirectory(prefix="edat_train_out_")
-        out_dir = tmp_ctx.name
-    try:
-        stats = launch_processes(
-            n_ranks,
-            functools.partial(_spawned_trainer_main, model_cfg=model_cfg,
-                              data_cfg=data_cfg, opt_cfg=opt_cfg,
-                              trainer_cfg=cfg, out_dir=out_dir),
-            timeout=timeout, n_procs=n_procs,
-            workers_per_rank=cfg.workers_per_rank, unconsumed="ignore",
-            **launch_kwargs)
-        res = load_distributed_results(out_dir)
-        res["stats"] = stats
-        return res
-    finally:
-        if own_tmp:
-            tmp_ctx.cleanup()
-
-
-# ------------------------------------------------------ module-level main
+# --------------------------------------------------------------- smoke CLI
 def _demo_cfgs(n_ranks: int, steps: int, ckpt_dir: Optional[str],
                ckpt_every: int = 4):
-    """Small default model/data/opt/trainer configs for the CLI and the
-    ``repro.net.launch`` module-spec entry point."""
+    """Small default model/data/opt/trainer configs for the smoke CLI and
+    the examples."""
     from repro.models import ModelCfg
     model_cfg = ModelCfg(
         name="tiny", family="dense", n_layers=2, d_model=64, n_heads=4,
@@ -719,48 +737,17 @@ def _demo_cfgs(n_ranks: int, steps: int, ckpt_dir: Optional[str],
     return model_cfg, data_cfg, opt_cfg, trainer_cfg
 
 
-def main(ctx: edat.Context) -> None:
-    """Module-level SPMD main, runnable as::
-
-        python -m repro.net.launch -n 4 --procs 2 --unconsumed ignore \\
-            repro.runtime_dist.trainer:main
-
-    Configured by environment (shared across the launched processes):
-    ``EDAT_TRAIN_STEPS`` (default 8), ``EDAT_TRAIN_CKPT_EVERY`` (4), and
-    ``EDAT_TRAIN_CKPT`` — the shared checkpoint/result directory (default:
-    a temp path derived from the coordinator address, which every process
-    of one launch shares)."""
-    import tempfile
-    steps = int(os.environ.get("EDAT_TRAIN_STEPS", "8"))
-    every = int(os.environ.get("EDAT_TRAIN_CKPT_EVERY", "4"))
-    base = os.environ.get("EDAT_TRAIN_CKPT")
-    if not base:
-        # EDAT_LAUNCH_ID is unique per launch (a reused coordinator port
-        # must not resurrect a previous run's checkpoints); the coord
-        # address is the fallback for externally-managed process groups
-        tag = (os.environ.get("EDAT_LAUNCH_ID")
-               or os.environ.get("EDAT_COORD", "local").replace(":", "_"))
-        base = os.path.join(tempfile.gettempdir(), f"edat_trainer_{tag}")
-    model_cfg, data_cfg, opt_cfg, trainer_cfg = _demo_cfgs(
-        ctx.n_ranks, steps, os.path.join(base, "ckpt"), every)
-    _spawned_trainer_main(ctx, model_cfg=model_cfg, data_cfg=data_cfg,
-                          opt_cfg=opt_cfg, trainer_cfg=trainer_cfg,
-                          out_dir=os.path.join(base, "out"))
-
-
 def _cli(argv=None) -> int:
-    """Distributed-trainer smoke: spawn ranks over SocketTransport,
-    optionally SIGKILL one process mid-training, and verify elastic
-    recovery — CI runs this with ``--kill``."""
+    """Distributed-trainer smoke: run the trainer program over a socket
+    :class:`edat.Session`, optionally SIGKILL one process mid-training,
+    and verify elastic recovery — CI runs this with ``--kill``."""
     import argparse
     import tempfile
     from repro.checkpoint import latest_step
-    from repro.net.launch import ProcessGroup
-    import functools
 
     ap = argparse.ArgumentParser(
         prog="python -m repro.runtime_dist.trainer",
-        description="Distributed elastic trainer smoke test.")
+        description="Distributed elastic trainer smoke test (v2 Session).")
     ap.add_argument("--ranks", type=int, default=4)
     ap.add_argument("--procs", type=int, default=2)
     ap.add_argument("--steps", type=int, default=10)
@@ -774,34 +761,36 @@ def _cli(argv=None) -> int:
 
     with tempfile.TemporaryDirectory(prefix="edat_trainer_smoke_") as td:
         ckdir = os.path.join(td, "ck")
-        outdir = os.path.join(td, "out")
-        os.makedirs(outdir)
         model_cfg, data_cfg, opt_cfg, trainer_cfg = _demo_cfgs(
             a.ranks, a.steps, ckdir, a.ckpt_every)
-        pg = ProcessGroup(
-            a.ranks,
-            functools.partial(_spawned_trainer_main, model_cfg=model_cfg,
-                              data_cfg=data_cfg, opt_cfg=opt_cfg,
-                              trainer_cfg=trainer_cfg, out_dir=outdir),
-            n_procs=a.procs, run_timeout=a.timeout,
-            workers_per_rank=trainer_cfg.workers_per_rank,
-            unconsumed="ignore", hb_interval=0.2, hb_timeout=1.5)
-        pg.start()
-        if a.kill:
-            deadline = time.monotonic() + a.timeout
-            while ((latest_step(ckdir) or 0) < a.ckpt_every
-                   and time.monotonic() < deadline):
-                time.sleep(0.05)
-            got = latest_step(ckdir) or 0
-            if got < a.ckpt_every:
-                pg.wait(5, check=False)
-                print(f"smoke FAILED: no checkpoint appeared (latest={got})")
-                return 1
-            pg.kill(a.ranks - 1)
-            print(f"[smoke] killed the process hosting rank {a.ranks - 1} "
-                  f"at checkpoint step {got}")
-        pg.wait(a.timeout, check=not a.kill)
-        res = load_distributed_results(outdir)
+        with edat.Session(a.ranks, procs=a.procs, transport="socket",
+                          timeout=a.timeout,
+                          workers_per_rank=trainer_cfg.workers_per_rank,
+                          unconsumed="ignore", hb_interval=0.2,
+                          hb_timeout=1.5) as s:
+            s.start(edat.deferred(trainer_program, model_cfg, data_cfg,
+                                  opt_cfg, trainer_cfg))
+            victim_ranks: set = set()
+            if a.kill:
+                deadline = time.monotonic() + a.timeout
+                while ((latest_step(ckdir) or 0) < a.ckpt_every
+                       and time.monotonic() < deadline):
+                    time.sleep(0.05)
+                got = latest_step(ckdir) or 0
+                if got < a.ckpt_every:
+                    s.wait(5, check=False)
+                    print(f"smoke FAILED: no checkpoint appeared "
+                          f"(latest={got})")
+                    return 1
+                victim = a.ranks - 1
+                victim_ranks = {r for rs in s.placement for r in rs
+                                if victim in rs}
+                s.kill(victim)
+                print(f"[smoke] killed the process hosting rank {victim} "
+                      f"at checkpoint step {got}")
+            s.wait(a.timeout, check=not a.kill)
+            res = s.gather() or {"history": [], "recoveries": [],
+                                 "final_params": {}}
         top = max((m["step"] for m in res["history"]), default=0)
         print(f"[smoke] steps reached: {top}/{a.steps}; "
               f"recoveries: {res['recoveries']}; "
@@ -813,8 +802,7 @@ def _cli(argv=None) -> int:
             print("smoke FAILED: no elastic recovery was recorded")
             return 1
         if a.kill:
-            survivors = set(range(a.ranks)) - set(
-                pg._proc_of(a.ranks - 1)[1])
+            survivors = set(range(a.ranks)) - victim_ranks
             if not survivors.issubset(set(res["final_params"])):
                 print(f"smoke FAILED: missing finals "
                       f"{survivors - set(res['final_params'])}")

@@ -1,6 +1,6 @@
-"""The paper's use-cases running *distributed*: Graph500 BFS and MONC
-in-situ analytics across real spawned OS processes over the coalescing
-SocketTransport.
+"""The paper's use-cases running *distributed* through the v2 Session
+API: Graph500 BFS and MONC in-situ analytics across real spawned OS
+processes over the coalescing SocketTransport.
 
 Acceptance-grade checks:
 
@@ -12,19 +12,17 @@ Acceptance-grade checks:
 * the distributed analytics pipeline reduces every (field, timestep)
   exactly once.
 """
-import functools
-import os
+import dataclasses
 import time
 
 import numpy as np
 import pytest
 
 import _chaos as chaos
-from repro.analytics import InsituCfg, distributed_insitu
-from repro.graph import (ReferenceBFS, build_csr, distributed_bfs,
-                         kronecker_edges)
-from repro.graph.bfs import _spawned_bfs_main
-from repro.net.launch import ProcessGroup
+from repro import edat
+from repro.analytics import InsituCfg, insitu_program
+from repro.graph import (ReferenceBFS, bfs_program, build_csr,
+                         default_root, kronecker_edges)
 
 pytestmark = pytest.mark.timeout(300)
 
@@ -34,31 +32,37 @@ def test_distributed_bfs_matches_bsp_reference(seed, n_ranks):
     """2-4 spawned processes; parent array must equal the BSP reference
     bitwise (not just same reachable set) on Kronecker graphs."""
     scale, edgefactor = 8, 8
-    parent, info = distributed_bfs(n_ranks, scale, edgefactor, seed=seed)
+    root = default_root(scale, edgefactor, seed)
+    with edat.Session(n_ranks, transport="socket", timeout=120) as s:
+        s.run(edat.deferred(bfs_program, n_ranks, scale,
+                            edgefactor=edgefactor, seed=seed, root=root))
+        res = s.gather()
+        stats = s.stats
+    parent = res["parent"]
+    traversed = int(np.sum(res["traversed"]))
     edges = kronecker_edges(scale, edgefactor, seed)
     csr = build_csr(edges, 1 << scale, n_ranks)
-    ref = ReferenceBFS(csr).run(info["root"])
+    ref = ReferenceBFS(csr).run(root)
     assert np.array_equal(parent, ref)
-    assert info["traversed"] > 0 and info["teps"] > 0
+    assert traversed > 0 and stats["run_seconds"] > 0
 
 
 def test_distributed_bfs_rank_kill_terminates_via_rank_failed(tmp_path):
     """SIGKILL a rank mid-traversal: the victim's visit task stalls (so
-    the BFS is provably in flight), the parent kills it, and every
-    survivor must exit promptly through the RANK_FAILED fail-stop task —
-    not hang inside the ALL-dependency until the join deadline."""
+    the BFS is provably in flight), the driver kills it through the
+    Session, and every survivor must exit promptly through the
+    RANK_FAILED fail-stop task — not hang inside the ALL-dependency
+    until the join deadline."""
     ready = str(tmp_path / "ready")
-    pg = ProcessGroup(
-        3,
-        functools.partial(_spawned_bfs_main, scale=8, edgefactor=8,
-                          seed=5, root=1, stall=(1, 2, 300.0),
-                          ready_path=ready),
-        run_timeout=60, hb_interval=0.2, hb_timeout=1.5)
-    pg.start()
-    t0 = chaos.sigkill_when_ready(pg, 1, ready, timeout=60, settle=0.2)
-    pg.wait(60, check=False)
-    took = time.monotonic() - t0
-    codes = pg.exitcodes()
+    with edat.Session(3, transport="socket", timeout=60,
+                      hb_interval=0.2, hb_timeout=1.5) as s:
+        s.start(edat.deferred(bfs_program, 3, 8, edgefactor=8, seed=5,
+                              root=1, stall=(1, 2, 300.0),
+                              ready_path=ready))
+        t0 = chaos.sigkill_when_ready(s, 1, ready, timeout=60, settle=0.2)
+        s.wait(60, check=False)
+        took = time.monotonic() - t0
+        codes = s.exitcodes()
     assert codes[1] != 0                       # the victim
     # survivors exited by themselves (EdatTaskError from the fail-stop
     # task), well before the 60s straggler deadline would have killed them
@@ -70,8 +74,11 @@ def test_distributed_bfs_rank_kill_terminates_via_rank_failed(tmp_path):
 def test_distributed_insitu_reduces_every_timestep():
     cfg = InsituCfg(n_analytics=2, items_per_producer=16, field_elems=128,
                     n_fields=2)
-    res = distributed_insitu(cfg)
-    assert res["results"] == cfg.items_per_producer
-    assert res["raw_items"] == 2 * cfg.items_per_producer
-    assert res["mean_latency_s"] > 0
-    assert res["bandwidth_items_s"] > 0
+    with edat.Session(2 * cfg.n_analytics, transport="socket",
+                      timeout=180, workers_per_rank=4) as s:
+        s.run(edat.deferred(insitu_program, dataclasses.asdict(cfg)))
+        summary = s.gather()
+        stats = s.stats
+    assert summary["results"] == cfg.items_per_producer
+    assert summary["mean_latency_s"] > 0
+    assert stats["run_seconds"] > 0

@@ -1,0 +1,298 @@
+"""v2 API acceptance: one Session entry point, typed channels, task
+handles, driver-side futures — and the v1 deprecation shims.
+
+* parity matrix: one small program through ``edat.run`` across
+  {inproc, socket} x {1 proc, 2 procs} produces identical results;
+* typed channels: a fire to an undeclared eid (when the program declares
+  channels) fails fast with KeyError; a payload-type mismatch fails with
+  TypeError at fire time; raw string eids keep working (anonymous
+  channels);
+* ``ctx.submit`` returns a TaskHandle; ``Session.call`` returns a Future
+  resolved by an event fired at task return;
+* the facade exports the collectives and timers (no deep imports);
+* deprecation shims (``Runtime.run``, ``distributed_bfs``,
+  ``distributed_insitu``, ``distributed_train``) warn exactly once per
+  call site with unchanged behaviour.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import edat
+
+pytestmark = pytest.mark.timeout(300)
+
+
+# ---------------------------------------------------------------- programs
+class RingSum:
+    """Tiny deterministic program: every rank fires (rank+1)^2 on the
+    typed ``val`` channel; rank 0 gathers the sum.  Module-level and
+    picklable, so the same object runs on every transport."""
+
+    channels = (edat.Channel("val", payload=int),
+                edat.Channel("sum", payload=int))
+
+    def __init__(self, n: int):
+        self.n = n
+        self.total = None
+        self.per_rank = {}
+
+    def start(self, ctx):
+        if ctx.rank == 0:
+            ctx.submit(self._gather,
+                       deps=[(r, "val") for r in range(ctx.n_ranks)],
+                       name="gather")
+        ctx.fire(0, "val", (ctx.rank + 1) ** 2)
+
+    def _gather(self, ctx, events):
+        for e in events:
+            self.per_rank[e.source] = e.data
+        self.total = sum(e.data for e in events)
+
+    def result(self):
+        return {"total": self.total,
+                "per_rank": dict(sorted(self.per_rank.items()))}
+
+
+class TypoProgram(RingSum):
+    def start(self, ctx):
+        ctx.fire(0, "vall", 1)       # not a declared channel
+
+
+class BadPayloadProgram(RingSum):
+    def start(self, ctx):
+        ctx.fire(0, "val", "not-an-int")
+
+
+def make_ringsum(n):
+    return RingSum(n)
+
+
+# ------------------------------------------------------------ parity matrix
+@pytest.mark.parametrize("transport,procs", [("inproc", None), ("inproc", 1),
+                                             ("socket", 1), ("socket", 2)])
+def test_run_parity_matrix(transport, procs):
+    """The same program through edat.run on every transport/placement
+    combination yields identical results (inproc has no process packing,
+    so its cells are procs=None/1)."""
+    res = edat.run(edat.deferred(make_ringsum, 4), ranks=4, procs=procs,
+                   transport=transport, timeout=120)
+    assert res == {"total": 30, "per_rank": {0: 1, 1: 4, 2: 9, 3: 16}}
+
+
+def test_procs_with_inproc_fails_fast():
+    """Forgetting transport='socket' must not silently run as threads."""
+    with pytest.raises(ValueError, match="socket"):
+        edat.Session(4, procs=2)
+
+
+def test_falsy_program_still_runs():
+    """A program object that is falsy (e.g. subclasses a container) must
+    not be mistaken for 'no program'."""
+    class DictProgram(dict):
+        def start(self, ctx):
+            ctx.submit(lambda c, e: self.__setitem__("ran", True))
+
+        def result(self):
+            return dict(self)
+
+    res = edat.run(DictProgram(), ranks=1)
+    assert res == {"ran": True}
+
+
+# ------------------------------------------------------------ typed channels
+def test_channel_is_str_and_interned():
+    ch = edat.Channel("grad", payload=dict)
+    assert isinstance(ch, str) and ch == "grad"
+    assert hash(ch) == hash("grad")      # routes exactly like the raw eid
+
+
+def test_channel_reserved_prefix_rejected():
+    with pytest.raises(ValueError):
+        edat.Channel("__internal")
+
+
+def test_channel_payload_validation_direct():
+    ch = edat.Channel("grad", payload=np.ndarray)
+    ch.validate(np.zeros(3))             # ok
+    ch.validate(None)                    # events without payload are fine
+    with pytest.raises(TypeError):
+        ch.validate([1, 2, 3])
+
+
+def test_fire_undeclared_eid_raises_keyerror():
+    """A typo'd eid fails fast (KeyError surfaced through the run's
+    EdatTaskError) instead of silently never matching."""
+    with pytest.raises(edat.EdatTaskError, match="declared channel"):
+        edat.run(TypoProgram(1), ranks=1)
+
+
+def test_fire_payload_type_mismatch_raises():
+    with pytest.raises(edat.EdatTaskError, match="expects payload"):
+        edat.run(BadPayloadProgram(1), ranks=1)
+
+
+def test_raw_string_eids_still_work_without_declaration():
+    """Anonymous channels: plain mains with raw string eids run with no
+    enforcement, exactly as in v1."""
+    got = []
+
+    def sink(ctx, events):
+        got.append(events[0].data)
+
+    def main(ctx):
+        if ctx.rank == 0:
+            ctx.submit(sink, deps=[(1, "anything")])
+        else:
+            ctx.fire(0, "anything", 7)
+
+    stats = edat.run(main, ranks=2)
+    assert got == [7] and stats["events_sent"] == 1
+
+
+# ------------------------------------------------- task handles and futures
+def test_submit_returns_removable_task_handle():
+    removed = []
+
+    def never(ctx, events):          # pragma: no cover - must not run
+        raise AssertionError("removed task executed")
+
+    def main(ctx):
+        h = ctx.submit_persistent(never, deps=[(edat.SELF, "x")],
+                                  name="doomed")
+        assert isinstance(h, edat.TaskHandle)
+        assert h.persistent and h.name == "doomed"
+        removed.append(h.remove())
+        anon = ctx.submit(lambda c, e: None)
+        assert anon.remove() is False        # unnamed: nothing to remove
+
+    edat.run(main, ranks=1)
+    assert removed == [True]
+
+
+def test_session_call_future_resolves_from_task_return():
+    with edat.Session(ranks=2) as s:
+        fut = s.call(1, lambda ctx, events: ctx.rank * 100 + events[0].data,
+                     deps=[(0, "seed")])
+
+        def main(ctx):
+            if ctx.rank == 0:
+                ctx.fire(1, "seed", 7)
+
+        s.run(main)
+        assert fut.done() and fut.result() == 107
+
+
+def test_future_result_drives_the_round():
+    """Future.result() on a not-yet-run session triggers a calls-only
+    round (blocking driver-side composition)."""
+    with edat.Session(ranks=2) as s:
+        fut = s.call(1, lambda ctx, events: 41 + 1)
+        assert not fut.done()
+        assert fut.result() == 42
+
+
+# ----------------------------------------------------------- facade exports
+def test_facade_exports_patterns_and_timers():
+    """The collectives and timers are importable from the facade — no
+    more deep repro.core.patterns imports."""
+    for name in ("barrier", "wait_barrier", "allreduce", "tree_reduce",
+                 "fire_after", "TimerHandle", "TaskHandle", "Channel",
+                 "Session", "Program", "deferred"):
+        assert hasattr(edat, name), name
+
+    sums = []
+
+    def main(ctx):
+        edat.allreduce(ctx, "s", ctx.rank + 1, lambda a, b: a + b,
+                       lambda c, acc: sums.append((c.rank, acc)))
+        h = edat.fire_after(ctx, 0.01, edat.SELF, "tick")
+        assert isinstance(h, edat.TimerHandle)
+        ctx.submit(lambda c, e: None, deps=[(edat.SELF, "tick")])
+
+    edat.run(main, ranks=2, workers_per_rank=2)
+    assert sorted(sums) == [(0, 3), (1, 3)]
+
+
+# -------------------------------------------------------- deprecation shims
+def test_runtime_run_warns_once_per_call_site_and_behaves():
+    def main(ctx):
+        ctx.submit(lambda c, e: None, deps=[(edat.SELF, "e")])
+        ctx.fire(edat.SELF, "e", 1)
+
+    results = []
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        for _ in range(2):               # same call site, twice
+            rt = edat.Runtime(1)
+            results.append(rt.run(main))
+    depr = [x for x in w if issubclass(x.category, DeprecationWarning)
+            and "Runtime.run" in str(x.message)]
+    assert len(depr) == 1, [str(x.message) for x in w]
+    assert all(r["events_sent"] == 1 for r in results)  # behaviour intact
+
+
+def test_distributed_bfs_shim_warns_and_matches_reference():
+    from repro.graph import (ReferenceBFS, build_csr, distributed_bfs,
+                             kronecker_edges)
+    with pytest.warns(DeprecationWarning, match="distributed_bfs"):
+        # n_procs is a v1 launcher kwarg: the shim must keep accepting it
+        parent, info = distributed_bfs(2, 7, 8, seed=5, n_procs=1)
+    edges = kronecker_edges(7, 8, 5)
+    ref = ReferenceBFS(build_csr(edges, 1 << 7, 2)).run(info["root"])
+    assert np.array_equal(parent, ref)
+    assert info["traversed"] > 0 and info["teps"] > 0
+
+
+def test_distributed_insitu_shim_warns_and_behaves():
+    from repro.analytics import InsituCfg, distributed_insitu
+    cfg = InsituCfg(n_analytics=1, items_per_producer=8, field_elems=64,
+                    n_fields=2)
+    with pytest.warns(DeprecationWarning, match="distributed_insitu"):
+        res = distributed_insitu(cfg)
+    assert res["results"] == cfg.items_per_producer
+    assert res["raw_items"] == cfg.items_per_producer
+
+
+def test_trainer_program_adopts_session_rank_count():
+    """The README v2 idiom: TrainerCfg left at its default n_ranks must
+    adopt the session's actual rank count at attach (the session is
+    authoritative, as it was for the v1 distributed_train helper)."""
+    from repro.runtime_dist.trainer import _demo_cfgs, trainer_program
+    model_cfg, data_cfg, opt_cfg, tcfg = _demo_cfgs(2, 1, None)
+    assert tcfg.n_ranks == 2
+    tr = trainer_program(model_cfg, data_cfg, opt_cfg, tcfg)
+    with edat.Session(3, unconsumed="ignore", timeout=240,
+                      workers_per_rank=tcfg.workers_per_rank) as s:
+        s.run(tr)
+        res = s.gather()
+    assert tr.cfg.n_ranks == 3
+    assert sorted(res["final_params"]) == [0, 1, 2]
+    assert all(m["n_grads"] == 3 for m in res["history"])
+
+
+def test_distributed_train_shim_warns_and_behaves(tmp_path):
+    from repro.runtime_dist import TrainerCfg, distributed_train
+    from repro.data import DataCfg
+    from repro.models import ModelCfg
+    from repro.optim import OptCfg
+    tiny = ModelCfg(name="tiny", family="dense", n_layers=1, d_model=32,
+                    n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                    vocab=64, dtype="float32", remat="none",
+                    max_target_length=32)
+    data = DataCfg(vocab=64, seq=16, global_batch=4, seed=7)
+    opt = OptCfg(name="adamw", peak_lr=3e-2, warmup=2, total_steps=50,
+                 clip_norm=1.0)
+    with pytest.warns(DeprecationWarning, match="distributed_train"):
+        res = distributed_train(
+            2, tiny, data, opt,
+            TrainerCfg(steps=2, n_ranks=2, collect_timeout=60.0),
+            n_procs=1, timeout=240.0, out_dir=str(tmp_path / "out"))
+    assert max(m["step"] for m in res["history"]) >= 2
+    assert sorted(res["final_params"]) == [0, 1]
+    # the deprecated path still persists the old on-disk layout,
+    # including the per-rank final step
+    assert (tmp_path / "out" / "history.json").exists()
+    with np.load(tmp_path / "out" / "final_rank0.npz") as z:
+        assert int(z["step"]) >= 2 and len(z.files) > 1

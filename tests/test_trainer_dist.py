@@ -1,6 +1,6 @@
-"""The elastic trainer running *distributed*: real spawned OS processes,
-several ranks per process, gradient exchange over the coalescing
-SocketTransport — and SIGKILL-grade fault tolerance.
+"""The elastic trainer running *distributed* through the v2 Session API:
+real spawned OS processes, several ranks per process, gradient exchange
+over the coalescing SocketTransport — and SIGKILL-grade fault tolerance.
 
 Acceptance-grade checks:
 
@@ -21,22 +21,17 @@ Determinism note: the quorum collector folds gradients in rank order
 distributed and in-proc runs are numerically interchangeable and the
 comparisons below can be tight.
 """
-import functools
-import os
-import time
-
 import numpy as np
 import pytest
 
 import _chaos as chaos
+from repro import edat
 from repro.checkpoint import latest_step
 from repro.data import DataCfg
 from repro.models import ModelCfg
-from repro.net.launch import ProcessGroup
 from repro.optim import OptCfg
 from repro.runtime_dist import (EventDrivenTrainer, TrainerCfg,
-                                flatten_params, load_distributed_results)
-from repro.runtime_dist.trainer import _spawned_trainer_main
+                                flatten_params, trainer_program)
 
 pytestmark = pytest.mark.timeout(600)
 
@@ -67,13 +62,13 @@ def _assert_params_close(flat_a, flat_b, rtol=1e-5, atol=1e-6):
 def test_distributed_trainer_matches_inproc(tmp_path):
     """No faults: 4 ranks / 2 processes over sockets == 4 threads-as-ranks
     in one process, final params compared rank by rank."""
-    from repro.runtime_dist import distributed_train
-
     steps = 6
-    res = distributed_train(
-        4, TINY, DATA, OPT,
-        TrainerCfg(steps=steps, n_ranks=4, collect_timeout=60.0),
-        n_procs=2, timeout=300.0, out_dir=str(tmp_path / "out"))
+    cfg = TrainerCfg(steps=steps, n_ranks=4, collect_timeout=60.0)
+    with edat.Session(4, procs=2, transport="socket", timeout=300.0,
+                      workers_per_rank=cfg.workers_per_rank,
+                      unconsumed="ignore") as s:
+        s.run(edat.deferred(trainer_program, TINY, DATA, OPT, cfg))
+        res = s.gather()
     assert sorted(res["final_params"]) == [0, 1, 2, 3]
     assert max(m["step"] for m in res["history"]) >= steps
     # sync quorum: every recorded step consumed all 4 replicas' grads
@@ -93,28 +88,24 @@ def test_distributed_sigkill_recovery_matches_inproc_elastic(tmp_path):
     elastic schedule (4 ranks to the recovery step R, 2 ranks from R)."""
     steps, every = 12, 3
     ckdir = str(tmp_path / "ck")
-    outdir = str(tmp_path / "out")
-    os.makedirs(outdir)
     cfg = TrainerCfg(steps=steps, n_ranks=4, ckpt_dir=ckdir,
                      ckpt_every=every, collect_timeout=30.0)
-    pg = ProcessGroup(
-        4, functools.partial(_spawned_trainer_main, model_cfg=TINY,
-                             data_cfg=DATA, opt_cfg=OPT, trainer_cfg=cfg,
-                             out_dir=outdir),
-        n_procs=2, run_timeout=300.0, workers_per_rank=cfg.workers_per_rank,
-        unconsumed="ignore", hb_interval=0.2, hb_timeout=1.5)
-    pg.start()
-    # SIGKILL-at-phase: wait (from outside, via the shared ckpt dir) for
-    # the first real checkpoint — the rollback anchor — then kill
-    chaos.wait_for(lambda: (latest_step(ckdir) or 0) >= every, 240,
-                   desc="first periodic checkpoint")
-    pg.kill(3)
-    pg.wait(300, check=False)
-    codes = pg.exitcodes()
+    with edat.Session(4, procs=2, transport="socket", timeout=300.0,
+                      workers_per_rank=cfg.workers_per_rank,
+                      unconsumed="ignore", hb_interval=0.2,
+                      hb_timeout=1.5) as s:
+        s.start(edat.deferred(trainer_program, TINY, DATA, OPT, cfg))
+        # SIGKILL-at-phase: wait (from outside, via the shared ckpt dir)
+        # for the first real checkpoint — the rollback anchor — then kill
+        chaos.wait_for(lambda: (latest_step(ckdir) or 0) >= every, 240,
+                       desc="first periodic checkpoint")
+        s.kill(3)
+        s.wait(300, check=False)
+        codes = s.exitcodes()
+        res = s.gather()
     assert codes[2] != 0 and codes[3] != 0        # the victim pair
     assert codes[0] == 0 and codes[1] == 0        # survivors finished
 
-    res = load_distributed_results(outdir)
     hist = res["history"]
     assert max(m["step"] for m in hist) >= steps
     # exactly one coordinated recovery per survivor (the per-hosted-rank
