@@ -29,6 +29,16 @@ def dryrun_table(dirpath: str) -> str:
     return hdr + "\n" + "\n".join(rows)
 
 
+def insights_section(stats, title: str = "Runtime insights") -> str:
+    """Markdown section running repro.insights over one run's
+    ``Session.stats()`` mapping (pass the dict, or a path to a JSON
+    dump of it)."""
+    from repro.insights import analyze, render
+    if isinstance(stats, str):
+        stats = json.load(open(stats))
+    return f"### {title}\n\n" + render(analyze(stats))
+
+
 if __name__ == "__main__":
     print(dryrun_table(sys.argv[1] if len(sys.argv) > 1
                        else "experiments/dryrun/pod16x16"))

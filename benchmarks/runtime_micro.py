@@ -33,11 +33,18 @@ import time
 from repro import edat
 
 
+#: most recent stats per transport axis — --insights analyzes these
+_LAST = {}
+
+
 def _inproc_stats(main, *, ranks, workers=1, progress="thread",
-                  unconsumed="error", timeout=240):
+                  unconsumed="error", timeout=240, metrics=True):
     with edat.Session(ranks, workers_per_rank=workers, progress=progress,
-                      unconsumed=unconsumed, timeout=timeout) as s:
+                      unconsumed=unconsumed, timeout=timeout,
+                      metrics=metrics) as s:
         s.run(main)
+        if metrics:
+            _LAST["inproc"] = s.stats
         return s.stats
 
 
@@ -56,7 +63,7 @@ def _tasks_per_s(n_tasks=2000, workers=2):
     return n_tasks / stats["run_seconds"]
 
 
-def _events_per_s(n_events=2000, progress="thread"):
+def _events_per_s(n_events=2000, progress="thread", metrics=True):
     got = []
 
     def sink(ctx, events):
@@ -69,9 +76,33 @@ def _events_per_s(n_events=2000, progress="thread"):
             for i in range(n_events):
                 ctx.fire(0, "e", i)
 
-    stats = _inproc_stats(main, ranks=2, progress=progress, timeout=120)
+    stats = _inproc_stats(main, ranks=2, progress=progress, timeout=120,
+                          metrics=metrics)
     assert len(got) == n_events
     return n_events / stats["run_seconds"]
+
+
+def _metrics_overhead_pct(n_events=20000, reps=8):
+    """Same-session A/B of the always-on counters, interleaved on/off.
+
+    Throughput interference on a shared box is one-sided — descheduling
+    and noisy neighbours only ever make a run *slower* — so the robust
+    estimate compares the top half of each side's rates (mean of the
+    best ``reps//2``), which keeps the least-interfered runs and is
+    stable where a single best-of pair or a per-pair median is not.
+    The acceptance bar is <= 5% — the counters stay on by default."""
+    # discarded warm-up pair: the first run of a fresh process pays the
+    # interpreter/allocator cold start, and it would always be an "on" run
+    _events_per_s(n_events, metrics=True)
+    _events_per_s(n_events, metrics=False)
+    on, off = [], []
+    for i in range(reps):
+        on.append(_events_per_s(n_events, metrics=True))
+        off.append(_events_per_s(n_events, metrics=False))
+    k = max(1, reps // 2)
+    top_on = sum(sorted(on)[-k:]) / k
+    top_off = sum(sorted(off)[-k:]) / k
+    return (top_off - top_on) / top_off * 100.0, top_off
 
 
 def _pingpong_latency(n_iters=500):
@@ -199,6 +230,7 @@ def _socket_stats(main, *, unconsumed="error"):
         t0 = time.monotonic()
         s.run(main)
         wall = time.monotonic() - t0
+        _LAST["socket"] = s.stats
         return s.stats, wall
 
 
@@ -216,12 +248,13 @@ def _socket_pingpong_latency(n_iters=500):
     return stats["run_seconds"] / (2 * n_iters)   # one-way latency
 
 
-def run(out: str = None, transport: str = "inproc"):
+def run(out: str = None, transport: str = "inproc", insights: bool = False):
     assert transport in ("inproc", "socket", "both")
     res = {}
     if transport in ("inproc", "both"):
         r250 = _routing_events_per_s(250)
         r1000 = _routing_events_per_s(1000)
+        overhead_pct, _ = _metrics_overhead_pct()
         res.update({
             "tasks_per_s": _tasks_per_s(),
             "events_per_s_thread": _events_per_s(progress="thread"),
@@ -233,6 +266,8 @@ def run(out: str = None, transport: str = "inproc"):
             # ~1.0 when routing is linear in consumer count; << 1 quadratic
             "routing_scaling_1000_vs_250": r1000 / r250,
             "session_overhead_s_inproc": _session_overhead_s("inproc"),
+            # counters A/B (negative = noise; acceptance bar is <= 5)
+            "metrics_overhead_pct": overhead_pct,
         })
     if transport in ("socket", "both"):
         ev_s, spawn_s = _socket_events_per_s()
@@ -242,6 +277,14 @@ def run(out: str = None, transport: str = "inproc"):
         res["session_overhead_s_socket"] = _session_overhead_s("socket")
     for k, v in res.items():
         print(f"  micro {k} = {v:.1f}" if v >= 10 else f"  micro {k} = {v:.3f}")
+    if insights:
+        from repro.insights import analyze
+        for axis in sorted(_LAST):
+            findings = analyze(_LAST[axis])
+            print(f"  insights ({axis}, last run): "
+                  + ("none — counters look healthy" if not findings else ""))
+            for f in findings:
+                print(f"    {f}")
     if out:
         os.makedirs(os.path.dirname(out), exist_ok=True)
         with open(out, "w") as f:
@@ -256,5 +299,8 @@ if __name__ == "__main__":
     ap.add_argument("--transport", choices=("inproc", "socket", "both"),
                     default="inproc",
                     help="which transport axis to measure (default inproc)")
+    ap.add_argument("--insights", action="store_true",
+                    help="run repro.insights.analyze on the last run's "
+                         "Session.stats per transport and print findings")
     a = ap.parse_args()
-    run(out=a.out, transport=a.transport)
+    run(out=a.out, transport=a.transport, insights=a.insights)

@@ -36,7 +36,7 @@ from repro.net import ProcessGroup, SocketTransport, launch_processes
 # -- v2 surface --------------------------------------------------------------
 from .channels import Channel
 from .program import DeferredProgram, Program, deferred
-from .session import Future, Session, run
+from .session import Future, RankDiedError, Session, run
 
 
 def fire_after(ctx: Context, delay: float, target: Any, eid: str,
@@ -51,7 +51,7 @@ def fire_after(ctx: Context, delay: float, target: Any, eid: str,
 __all__ = [
     # v2 entry points
     "Session", "run", "Channel", "Program", "DeferredProgram", "deferred",
-    "Future", "TaskHandle",
+    "Future", "RankDiedError", "TaskHandle",
     # core primitives
     "ALL", "ANY", "SELF", "RANK_FAILED", "Dep", "Event", "dep",
     "Context", "Runtime", "EdatDeadlockError", "EdatTaskError",

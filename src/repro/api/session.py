@@ -46,6 +46,7 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
                     Union)
 
 from repro.core.event import ANY
+from repro.core.metrics import RunStats, merge_metrics
 from repro.core.runtime import Context, Runtime
 
 from .program import DeferredProgram, Program
@@ -56,12 +57,20 @@ DepLike = Tuple[Any, str]
 _UNSET = object()
 
 
+class RankDiedError(RuntimeError):
+    """A :meth:`Session.call`'s result is unrecoverable because the
+    process hosting the callee rank exited abnormally before the call's
+    task returned.  Distinct from ``TimeoutError`` (the round merely has
+    not finished yet — retry ``result()`` later)."""
+
+
 class Future:
     """Driver-side handle for a :meth:`Session.call` result."""
 
-    def __init__(self, session: "Session", cid: int):
+    def __init__(self, session: "Session", cid: int, rank: int = -1):
         self._session = session
         self.cid = cid
+        self.rank = rank
         self._value: Any = _UNSET
 
     def done(self) -> bool:
@@ -72,10 +81,22 @@ class Future:
 
     def result(self, timeout: Optional[float] = None) -> Any:
         """Block until the call's task has run and returned (driving the
-        session round if it has not started yet)."""
+        session round if it has not started yet).
+
+        Raises ``TimeoutError`` if the round is still running after
+        ``timeout`` seconds — the round is left in flight and the future
+        stays retryable (the session is *not* torn down).  Raises
+        :class:`RankDiedError` when the round is over but the process
+        hosting the callee rank exited abnormally, naming the dead rank."""
         if not self.done():
             self._session._resolve(timeout)
         if not self.done():
+            code = self._session._rank_exitcode(self.rank)
+            if code not in (None, 0):
+                raise RankDiedError(
+                    f"call {self.cid} was scheduled on rank {self.rank}, "
+                    f"whose process exited with code {code} before the "
+                    f"call's task returned")
             raise RuntimeError(
                 f"call {self.cid} produced no result (was its process "
                 f"killed, or the session round skipped?)")
@@ -206,7 +227,9 @@ class Session:
                  hb_interval: float = 0.5,
                  hb_timeout: float = 5.0,
                  host: str = "127.0.0.1",
-                 timeout: float = 120.0):
+                 timeout: float = 120.0,
+                 metrics: bool = True,
+                 trace: bool = False):
         if transport not in ("inproc", "socket"):
             raise ValueError(f"unknown transport {transport!r} "
                              f"(expected 'inproc' or 'socket')")
@@ -231,8 +254,17 @@ class Session:
         self.hb_timeout = hb_timeout
         self.host = host
         self.timeout = timeout
-        #: rank-0 run stats of the most recent round (events/tasks/seconds)
-        self.stats: Dict[str, Any] = {}
+        #: always-on per-channel/rank/transport counters (``metrics=False``
+        #: disables them for A/B overhead runs); ``trace=True`` additionally
+        #: records bounded per-rank task/event timelines in the stats
+        self.metrics = bool(metrics)
+        self.trace = bool(trace)
+        #: rank-0 run stats of the most recent round.  A callable dict:
+        #: ``s.stats["run_seconds"]`` and ``s.stats()`` both work; with
+        #: metrics on it also carries the structured ``"channels"`` /
+        #: ``"ranks"`` / ``"transport"`` sections (merged across processes
+        #: for socket rounds)
+        self.stats: RunStats = RunStats()
         self._runtime: Optional[Runtime] = None    # inproc, current round
         self._pg = None                            # socket, current round
         self._tmpdir: Optional[str] = None
@@ -281,7 +313,9 @@ class Session:
             self._runtime = Runtime(self.ranks,
                                     workers_per_rank=self.workers_per_rank,
                                     progress=self.progress,
-                                    unconsumed=self.unconsumed)
+                                    unconsumed=self.unconsumed,
+                                    metrics=self.metrics,
+                                    trace=self.trace)
         return self._runtime
 
     def run(self, program: Optional[ProgramLike] = None, *,
@@ -307,10 +341,14 @@ class Session:
         rt = self.runtime
         t0 = time.monotonic()
         try:
-            stats = dict(rt._run_internal(main, timeout=timeout))
+            stats = RunStats(rt._run_internal(main, timeout=timeout))
         finally:
             self._runtime = None          # a Runtime is single-shot
         stats.setdefault("run_seconds", time.monotonic() - t0)
+        mt = rt.metrics()
+        if mt is not None:
+            # same canonical shape as the cross-process socket merge
+            stats.update(merge_metrics([(0, mt)]))
         self.stats = stats
         for cid, val in main.call_results.items():
             fut = self._futures.pop(cid, None)
@@ -347,7 +385,8 @@ class Session:
             unconsumed=self.unconsumed, coalesce=self.coalesce,
             flush_interval=self.flush_interval,
             max_batch_bytes=self.max_batch_bytes,
-            hb_interval=self.hb_interval, hb_timeout=self.hb_timeout)
+            hb_interval=self.hb_interval, hb_timeout=self.hb_timeout,
+            metrics=self.metrics, trace=self.trace)
         if self.placement_spec is not None:
             kwargs["placement"] = self.placement_spec
         else:
@@ -367,7 +406,7 @@ class Session:
         pg, self._pg = self._pg, None
         self._last_pg = pg
         try:
-            self.stats = dict(pg.wait(timeout, check=check) or {})
+            self.stats = RunStats(pg.wait(timeout, check=check) or {})
         finally:
             self._load_spool()
         return self.stats
@@ -429,7 +468,7 @@ class Session:
         value, delivered by an event fired at task return.  For socket
         sessions ``fn`` (and its return value) must pickle."""
         cid = next(self._cids)
-        fut = Future(self, cid)
+        fut = Future(self, cid, int(rank))
         self._futures[cid] = fut
         self._calls.append((cid, int(rank), fn, list(deps)))
         return fut
@@ -438,11 +477,29 @@ class Session:
         calls, self._calls = self._calls, []
         return calls
 
+    def _rank_exitcode(self, rank: int) -> Optional[int]:
+        """Exit code of the process that hosted ``rank`` in the current or
+        last socket round; None for inproc sessions / unspawned rounds."""
+        pg = self._pg or getattr(self, "_last_pg", None)
+        if pg is None:
+            return None
+        return pg.exitcodes().get(rank)
+
     def _resolve(self, timeout: Optional[float]) -> None:
         """Drive pending futures to resolution: join an in-flight round,
-        else run a calls-only round."""
+        else run a calls-only round.
+
+        With a ``timeout`` and a spawned round still in flight, the join
+        is *soft*: if the deadline passes the round is left running and
+        ``TimeoutError`` is raised — a slow round must stay retryable,
+        not be SIGKILLed by the deadline (which the hard ``wait`` would
+        do, wedging every other future of the round)."""
         if self._pg is not None:
-            self.wait(timeout)
+            if timeout is not None and not self._pg.join_all(timeout):
+                raise TimeoutError(
+                    f"session round still running after {timeout}s; the "
+                    f"round is left in flight — retry result() later")
+            self.wait()
         elif self._calls:
             self.run(None, timeout=timeout)
 

@@ -42,6 +42,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 from .deprecation import warn_deprecated
 from .event import (ALL, ANY, SELF, RANK_FAILED, SYS_PREFIX, TIMER_CANCELLED,
                     Dep, Event, copy_payload)
+from .metrics import _FIXED8, payload_nbytes
 from .scheduler import Scheduler
 from .transport import CONTROL, EVENT, InProcTransport, Message, Transport
 
@@ -275,19 +276,28 @@ class Runtime:
                  progress: str = "thread",
                  unconsumed: str = "error",
                  transport: Optional[Transport] = None,
-                 poll_interval: float = 0.002):
+                 poll_interval: float = 0.002,
+                 metrics: bool = True,
+                 trace: bool = False):
         assert progress in ("thread", "worker")
         assert unconsumed in ("error", "warn", "ignore")
         self.n_ranks = n_ranks
         self.transport: Transport = transport or InProcTransport(n_ranks)
         self._distributed = bool(self.transport.distributed)
+        # loopback-only transports can never put a fire on the wire, so the
+        # fire-path metrics skip the per-target membership test entirely
+        self._wire_possible = bool(self.transport.serializes)
         local = self.transport.local_ranks
         self._local_ranks: List[int] = (sorted(local) if local is not None
                                         else list(range(n_ranks)))
         #: the rank that runs the Mattern detector and broadcasts terminate
         self._det_rank = 0
+        self._metrics_on = bool(metrics)
+        self._trace_on = bool(trace)
         self._sched = {r: Scheduler(r, n_ranks, self, workers_per_rank,
-                                    progress) for r in self._local_ranks}
+                                    progress, metrics=self._metrics_on,
+                                    trace=self._trace_on)
+                       for r in self._local_ranks}
         self._ctxs = {r: Context(self, r) for r in self._local_ranks}
         self._progress_mode = progress
         self._unconsumed = unconsumed
@@ -410,8 +420,32 @@ class Runtime:
         # never observe balanced counters with the message still in flight;
         # a send to a dead destination is counted by the transport as
         # dropped: termination balances sent == received + dropped
-        with sch._mu:
-            sch.sent += len(msgs)
+        if sch.metrics_on:
+            # count_fire_locked, inlined with the arithmetic hoisted off the
+            # lock: this is the fire hot path
+            n = len(msgs)
+            nbytes = (8 if type(data) in _FIXED8
+                      else payload_nbytes(data)) * n
+            if not self._wire_possible:
+                wire = 0
+            elif n == 1:                       # overwhelmingly common
+                wire = 0 if targets[0] in self._sched else 1
+            else:
+                wire = 0
+                for t in targets:
+                    if t not in self._sched:
+                        wire += 1
+            with sch._mu:
+                sch.sent += n
+                rec = sch._m_fires.get(eid)
+                if rec is None:
+                    rec = sch._m_fires[eid] = [0, 0, 0]
+                rec[0] += n
+                rec[1] += nbytes
+                rec[2] += wire
+        else:
+            with sch._mu:
+                sch.sent += len(msgs)
         if len(msgs) == 1:
             self.transport.send(msgs[0])
         else:
@@ -419,7 +453,9 @@ class Runtime:
 
     def _fire_batch(self, src: int, fires: Sequence[FireLike], *,
                     persistent: bool, ref: bool) -> None:
+        sch = self._sched[src]
         msgs: List[Message] = []
+        agg: Optional[Dict[str, List[int]]] = {} if sch.metrics_on else None
         for f in fires:
             target, eid = f[0], f[1]
             data = f[2] if len(f) > 2 else None
@@ -437,11 +473,20 @@ class Runtime:
                                           source=src, eid=eid,
                                           persistent=persistent),
                                     owned=ref))
+            if agg is not None:
+                rec = agg.get(eid)
+                if rec is None:
+                    rec = agg[eid] = [0, 0, 0]
+                rec[0] += len(targets)
+                rec[1] += payload_nbytes(data) * len(targets)
+                rec[2] += sum(1 for t in targets if t not in self._sched)
         if not msgs:
             return
-        sch = self._sched[src]
         with sch._mu:
             sch.sent += len(msgs)
+            if agg:
+                for eid, v in agg.items():
+                    sch.count_fire_locked(eid, v[0], v[1], v[2])
         self.transport.send_many(msgs)
 
     def _send_refire(self, rank: int, ev: Event) -> None:
@@ -455,6 +500,10 @@ class Runtime:
         ev = Event(data=copy_payload(data), source=src, eid=eid)
         with sch._mu:
             sch.sent += 1
+            if sch.metrics_on:
+                sch.count_fire_locked(
+                    eid, 1, payload_nbytes(data),
+                    0 if target in self._sched else 1)
         self.transport.send(Message(EVENT, src, target, ev))
 
     # ------------------------------------------------------------- progress
@@ -670,6 +719,52 @@ class Runtime:
 
     def _ctx(self, rank: int) -> Context:
         return self._ctxs[rank]
+
+    # -------------------------------------------------------------- metrics
+    def metrics(self) -> Optional[Dict[str, Any]]:
+        """This process's metric snapshot: per-channel counters merged over
+        the local ranks, per-rank execution totals, and the transport's
+        wire-level view.  ``None`` when the runtime was built with
+        ``metrics=False``.  Shape matches what
+        :func:`repro.core.metrics.merge_metrics` consumes; the quorum-wait
+        seconds a local consumer attributes to a *remote* rank appear under
+        that remote rank's entry (merge sums them)."""
+        if not self._metrics_on:
+            return None
+        channels: Dict[str, Dict[str, int]] = {}
+        ranks: Dict[int, Dict[str, Any]] = {}
+        for r, sch in self._sched.items():
+            snap = sch.metrics_snapshot()
+            rk = ranks.setdefault(r, {"tasks_executed": 0, "busy_s": 0.0,
+                                      "quorum_wait_s": 0.0})
+            rk["tasks_executed"] += snap["tasks_executed"]
+            rk["busy_s"] += snap["busy_s"]
+            for eid, (n, b, w) in snap["fires"].items():
+                ch = channels.setdefault(
+                    eid, {"fires": 0, "bytes": 0, "wire_fires": 0,
+                          "deliveries": 0, "consumed": 0, "queued_max": 0})
+                ch["fires"] += n
+                ch["bytes"] += b
+                ch["wire_fires"] += w
+            for eid, (d, c, _p, qm) in snap["deliveries"].items():
+                ch = channels.setdefault(
+                    eid, {"fires": 0, "bytes": 0, "wire_fires": 0,
+                          "deliveries": 0, "consumed": 0, "queued_max": 0})
+                ch["deliveries"] += d
+                ch["consumed"] += c
+                ch["queued_max"] = max(ch["queued_max"], qm)
+            for src, secs in snap["quorum_wait_s"].items():
+                srk = ranks.setdefault(
+                    src, {"tasks_executed": 0, "busy_s": 0.0,
+                          "quorum_wait_s": 0.0})
+                srk["quorum_wait_s"] += secs
+            if self._trace_on:
+                rk.setdefault("trace", []).extend(snap.get("trace", ()))
+                rk["trace_dropped"] = (rk.get("trace_dropped", 0)
+                                       + snap.get("trace_dropped", 0))
+        tmetrics = getattr(self.transport, "metrics", None)
+        transport = tmetrics() if callable(tmetrics) else {"kind": "inproc"}
+        return {"channels": channels, "ranks": ranks, "transport": transport}
 
     # ------------------------------------------------------------------ run
     def run(self, main: Callable[[Context], None],

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import itertools
 import threading
+import time
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -33,6 +34,10 @@ from .event import ALL, ANY, SELF, Dep, Event
 from .router import EventRouter
 
 _inst_uid = itertools.count()
+
+#: per-rank cap on opt-in trace records; beyond it, records are counted
+#: (``trace_dropped``) instead of stored, bounding memory on long runs
+TRACE_CAP = 50_000
 
 
 class Slot:
@@ -65,17 +70,32 @@ def expand_deps(deps: List[Dep], rank: int, n_ranks: int) -> List[Dep]:
 class Frame:
     """A (possibly partial) set of dependency slots (paper §IV.A)."""
 
-    __slots__ = ("slots", "birth")
+    __slots__ = ("slots", "birth", "t_first", "last_src")
     _birth = itertools.count()
 
     def __init__(self, deps: List[Dep]):
         self.slots = [Slot(d) for d in deps]
         self.birth = next(Frame._birth)
+        # quorum tracking (multi-slot frames only): when the first slot
+        # filled, and which source rank filled the most recent slot — the
+        # metrics layer charges the frame's completion lag to that rank
+        self.t_first: Optional[float] = None
+        self.last_src = -1
+
+    def note(self, ev: Event) -> None:
+        if len(self.slots) > 1:
+            if self.t_first is None:
+                self.t_first = time.monotonic()
+            self.last_src = ev.source
 
     def try_fill(self, ev: Event) -> bool:
         for s in self.slots:
             if not s.filled and s.dep.matches(ev):
                 s.event = ev
+                if len(self.slots) > 1:     # note(), inlined: hot path
+                    if self.t_first is None:
+                        self.t_first = time.monotonic()
+                    self.last_src = ev.source
                 return True
         return False
 
@@ -90,12 +110,15 @@ class Frame:
 class Consumer:
     """Base: an ordered claim on future events (task or waiter)."""
 
-    __slots__ = ("deps", "name", "reg_order")
+    __slots__ = ("deps", "name", "reg_order", "quorum")
 
     def __init__(self, deps: List[Dep], name: Optional[str]):
         self.deps = deps
         self.name = name
         self.reg_order = -1
+        # (t_first, last_src) of the most recently popped frame — read by
+        # the scheduler's metrics layer right after pop_ready()
+        self.quorum: Optional[Tuple[Optional[float], int]] = None
 
     def try_fill(self, ev: Event) -> bool:  # pragma: no cover - abstract
         raise NotImplementedError
@@ -138,6 +161,10 @@ class TaskConsumer(Consumer):
                 self.frames.pop(i)
                 if self.persistent and not self.frames:
                     self.frames.append(Frame(self.deps))
+                # only multi-slot frames stamp t_first; skip the tuple
+                # allocation for the common single-dep case
+                self.quorum = (None if f.t_first is None
+                               else (f.t_first, f.last_src))
                 return f.events()
         return None
 
@@ -168,7 +195,10 @@ class Waiter(Consumer):
     def pop_ready(self) -> Optional[List[Event]]:
         if self.frame.complete and not self.woken:
             self.woken = True
-            return self.frame.events()
+            f = self.frame
+            self.quorum = (None if f.t_first is None
+                           else (f.t_first, f.last_src))
+            return f.events()
         return None
 
     @property
@@ -179,13 +209,17 @@ class Waiter(Consumer):
 class Instance:
     """A task execution instance on the ready queue."""
 
-    __slots__ = ("fn", "events", "name", "uid")
+    __slots__ = ("fn", "events", "name", "uid", "mrec")
 
-    def __init__(self, fn, events, name):
+    def __init__(self, fn, events, name, mrec=None):
         self.fn = fn
         self.events = events
         self.name = name
         self.uid = next(_inst_uid)
+        # the delivery-time metrics record ([deliv, consumed, pending,
+        # qmax]) for single-dep instances dispatched straight from a
+        # delivery: _run consume-counts through it without re-probing
+        self.mrec = mrec
 
 
 class _TaskTLS(threading.local):
@@ -199,7 +233,8 @@ class Scheduler:
     """One rank's scheduler (paper: one 'process')."""
 
     def __init__(self, rank: int, n_ranks: int, runtime, target_workers: int,
-                 progress_mode: str = "thread"):
+                 progress_mode: str = "thread", metrics: bool = True,
+                 trace: bool = False):
         self.rank = rank
         self.n_ranks = n_ranks
         self.runtime = runtime
@@ -237,6 +272,18 @@ class Scheduler:
         self._tls = _TaskTLS()
         self._threads: List[threading.Thread] = []
         self._executed = 0  # stats
+
+        # -- metrics (always-on by default; every bump happens under a lock
+        # the hot path already holds, so "off" only saves the dict ops) --
+        self.metrics_on = metrics
+        self.trace_on = trace
+        self._m_fires: Dict[str, List[int]] = {}   # eid -> [n, bytes, wire]
+        self._m_deliv: Dict[str, List[int]] = {}   # eid -> [deliv, consumed,
+        #                                                    pending, qmax]
+        self._m_quorum: Dict[int, float] = {}      # src rank -> wait seconds
+        self._busy_s = 0.0
+        self._trace: List[tuple] = []
+        self._trace_dropped = 0
 
     # ------------------------------------------------------------------ util
     def _spawn_worker(self):
@@ -295,8 +342,48 @@ class Scheduler:
         refires: List[Event] = []
         with self._mu:
             self.received += len(evs)
-            for ev in evs:
-                self._offer_locked(ev, ready, wake, refires)
+            if self.trace_on:
+                self._trace_add_locked(
+                    ("recv", time.monotonic(), len(evs), evs[0].eid))
+            if self.metrics_on:
+                # account runs of equal eids and offer their events in one
+                # pass: coalesced deliveries are near-always single-channel
+                # batches, so this costs one dict probe per run — and the
+                # run's record rides along to _offer_locked so single-dep
+                # task instances consume-count in _run without re-probing
+                md = self._m_deliv
+                if len(evs) == 1:          # single event: the common case
+                    ev = evs[0]
+                    rec = md.get(ev.eid)
+                    if rec is None:
+                        rec = md[ev.eid] = [0, 0, 0, 0]
+                    rec[0] += 1
+                    rec[2] += 1
+                    if rec[2] > rec[3]:
+                        rec[3] = rec[2]
+                    self._offer_locked(ev, ready, wake, refires, rec)
+                else:
+                    i, n = 0, len(evs)
+                    while i < n:
+                        eid = evs[i].eid
+                        j = i + 1
+                        while j < n and evs[j].eid == eid:
+                            j += 1
+                        rec = md.get(eid)
+                        if rec is None:
+                            rec = md[eid] = [0, 0, 0, 0]
+                        k = j - i
+                        rec[0] += k
+                        rec[2] += k
+                        if rec[2] > rec[3]:
+                            rec[3] = rec[2]
+                        while i < j:
+                            self._offer_locked(evs[i], ready, wake,
+                                               refires, rec)
+                            i += 1
+            else:
+                for ev in evs:
+                    self._offer_locked(ev, ready, wake, refires)
             if ready:
                 self._ready.extend(ready)
                 self._cv.notify_all()
@@ -314,12 +401,13 @@ class Scheduler:
             self.runtime._poke()
 
     def _offer_locked(self, ev: Event, ready: List[Instance],
-                      wake: List[Waiter], refires: List[Event]) -> None:
+                      wake: List[Waiter], refires: List[Event],
+                      mrec: Optional[List[int]] = None) -> None:
         c = self._router.offer(ev)
         if c is not None:
             if ev.persistent:
                 refires.append(ev)  # re-fires locally on consumption (§IV.A)
-            self._drain_consumer_locked(c, ready, wake)
+            self._drain_consumer_locked(c, ready, wake, mrec)
             if isinstance(c, TaskConsumer) and c.persistent:
                 # a dispatched frame opened fresh slots (paper §IV.A refill):
                 # top them up from stored events, which would otherwise sit
@@ -329,14 +417,32 @@ class Scheduler:
         self._store_put_locked(ev)
 
     def _drain_consumer_locked(self, c: Consumer, ready: List[Instance],
-                               wake: List[Waiter]) -> None:
+                               wake: List[Waiter],
+                               mrec: Optional[List[int]] = None) -> None:
         while True:
             evs = c.pop_ready()
             if evs is None:
                 break
+            if self.metrics_on:
+                q = c.quorum        # set only for multi-slot frames
+                if q is not None:
+                    # charge the frame's completion lag (first slot filled ->
+                    # last slot filled, i.e. now) to the rank whose event
+                    # arrived last: a straggler accumulates a dominant share
+                    lag = time.monotonic() - q[0]
+                    if lag > 0.0:
+                        self._m_quorum[q[1]] = (
+                            self._m_quorum.get(q[1], 0.0) + lag)
             if isinstance(c, TaskConsumer):
-                ready.append(Instance(c.fn, evs, c.name))
+                # a single-slot frame's event eid equals the offered eid, so
+                # the delivery record (if any) is the right consume record
+                ready.append(Instance(c.fn, evs, c.name,
+                                      mrec if len(evs) == 1 else None))
             else:
+                # waiters resume immediately: their events are consumed now
+                # (task instances are counted at completion in _run)
+                if self.metrics_on:
+                    self._count_consumed_locked(evs)
                 if c.parked:
                     # keep the rank non-idle until the woken thread resumes
                     self._resuming += 1
@@ -411,6 +517,7 @@ class Scheduler:
                     ev = self._take_from_store_locked(s.dep)
                     if ev is not None:
                         s.event = ev
+                        f.note(ev)
                         if ev.persistent:
                             refires.append(ev)
                         progress = True
@@ -533,6 +640,8 @@ class Scheduler:
                         refires.append(ev)
                     got.append(ev)
             self.sent += len(refires)
+            if self.metrics_on and got:
+                self._count_consumed_locked(got)
         for ev in refires:
             self.runtime._send_refire(self.rank, ev)
         return got
@@ -584,12 +693,15 @@ class Scheduler:
         with self._mu:
             self._loops += 1
         poll = self.progress_mode == "worker"
+        busy_t0 = 0.0       # busy-span start stamp; 0.0 = currently idle
         while True:
             inst = None
             with self._mu:
                 if self._loops > self.target or (
                         self._shutdown and not self._ready):
                     self._loops -= 1
+                    if busy_t0:
+                        self._busy_s += time.monotonic() - busy_t0
                     return
                 if self._ready and self._running < self.target:
                     inst = self._ready.popleft()
@@ -598,6 +710,11 @@ class Scheduler:
                 if poll and self._poll_once():
                     continue
                 with self._mu:
+                    if busy_t0:
+                        # idle transition: close the busy span (spans keep
+                        # per-task timestamps off the execution hot path)
+                        self._busy_s += time.monotonic() - busy_t0
+                        busy_t0 = 0.0
                     if self._mail:
                         self._mail = False  # message raced our last poll
                     elif not self._ready and not self._shutdown:
@@ -610,11 +727,16 @@ class Scheduler:
                         else:
                             self._cv.wait()
                 continue
+            if busy_t0 == 0.0 and self.metrics_on:
+                busy_t0 = time.monotonic()
             self._run(inst)
             if self._tls.exit_after_task:
                 # this thread left the pool when it parked (loops already
                 # decremented); a replacement is looping in its stead
                 self._tls.exit_after_task = False
+                if busy_t0:
+                    with self._mu:
+                        self._busy_s += time.monotonic() - busy_t0
                 return
 
     def _poll_once(self) -> bool:
@@ -625,6 +747,9 @@ class Scheduler:
         ctx = self.runtime._ctx(self.rank)
         self._tls.locks = set()
         self._tls.in_task = True
+        # busy time is span-based (idle->busy transitions in _worker_loop),
+        # so per-task timestamps are only taken for the opt-in trace
+        t0 = time.monotonic() if self.trace_on else 0.0
         try:
             inst.fn(ctx, inst.events)
         except Exception as e:  # noqa: BLE001 - report any task failure
@@ -634,13 +759,75 @@ class Scheduler:
             for n in sorted(self._tls.locks):
                 self.unlock(n)  # auto-release (paper §IV.C)
             self._tls.locks = None
+            dur = (time.monotonic() - t0) if self.trace_on else 0.0
             with self._mu:
                 self._running -= 1
                 self._executed += 1
+                if self.metrics_on:
+                    rec = inst.mrec       # consume accounting: the delivery
+                    if rec is not None:   # record rode in on the instance
+                        rec[1] += 1
+                        rec[2] -= 1
+                    else:                 # multi-dep / store-filled / 0-dep
+                        md = self._m_deliv
+                        for ev in inst.events:
+                            rec = md.get(ev.eid)
+                            if rec is None:
+                                rec = md[ev.eid] = [0, 0, 0, 0]
+                            rec[1] += 1
+                            rec[2] -= 1
+                if self.trace_on:
+                    self._trace_add_locked(
+                        ("task", t0, dur,
+                         inst.name or getattr(inst.fn, "__name__", "?"),
+                         len(inst.events)))
                 self._cv.notify_all()
                 idle = self._idle_locked()
             if idle:
                 self.runtime._poke()
+
+    # --------------------------------------------------------------- metrics
+    def count_fire_locked(self, eid: str, n: int, nbytes: int,
+                          wire: int) -> None:
+        """Charge ``n`` fires on channel ``eid`` (caller holds ``_mu`` —
+        the fire paths bump this alongside ``sent``)."""
+        rec = self._m_fires.get(eid)
+        if rec is None:
+            rec = self._m_fires[eid] = [0, 0, 0]
+        rec[0] += n
+        rec[1] += nbytes
+        rec[2] += wire
+
+    def _count_consumed_locked(self, evs) -> None:
+        md = self._m_deliv
+        for ev in evs:
+            rec = md.get(ev.eid)
+            if rec is None:
+                rec = md[ev.eid] = [0, 0, 0, 0]
+            rec[1] += 1
+            rec[2] -= 1
+
+    def _trace_add_locked(self, rec: tuple) -> None:
+        if len(self._trace) < TRACE_CAP:
+            self._trace.append(rec)
+        else:
+            self._trace_dropped += 1
+
+    def metrics_snapshot(self) -> dict:
+        """Consistent snapshot of this rank's counters (takes ``_mu``)."""
+        with self._mu:
+            out = {
+                "fires": {e: tuple(v) for e, v in self._m_fires.items()},
+                "deliveries": {e: tuple(v)
+                               for e, v in self._m_deliv.items()},
+                "quorum_wait_s": dict(self._m_quorum),
+                "tasks_executed": self._executed,
+                "busy_s": self._busy_s,
+            }
+            if self.trace_on:
+                out["trace"] = list(self._trace)
+                out["trace_dropped"] = self._trace_dropped
+            return out
 
     # ---------------------------------------------------------- termination
     def set_main_done(self):

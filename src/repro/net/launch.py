@@ -131,6 +131,14 @@ def _child_entry(ranks: Tuple[int, ...], n_ranks: int, coord_addr,
         fin = getattr(main, "_edat_finalize", None)
         if fin is not None:
             fin(ranks, stats)
+        # every child (not just rank 0's) reports its metric snapshot so
+        # the parent can merge per-channel counters across processes
+        mt = rt.metrics()
+        if mt is not None:
+            try:
+                result_q.put(("metrics", ranks[0], mt))
+            except Exception:
+                pass  # unpicklable trace payload etc: stats still flow
         if 0 in ranks:
             stats = dict(stats)
             stats["run_seconds"] = run_seconds
@@ -216,12 +224,25 @@ class ProcessGroup:
         self._killed.update(rs)
         self._procs[lead].kill()
 
+    def join_all(self, timeout: Optional[float] = None) -> bool:
+        """Soft join: wait for every process to exit *without* killing
+        stragglers.  True iff all processes have exited.  This is the
+        non-destructive probe ``Future.result(timeout)`` uses — a timeout
+        must leave the round running and retryable, not SIGKILL it."""
+        deadline = time.monotonic() + (
+            timeout if timeout is not None else self.run_timeout + 30.0)
+        for p in self._procs.values():
+            p.join(max(0.0, deadline - time.monotonic()))
+        return all(not p.is_alive() for p in self._procs.values())
+
     def wait(self, timeout: Optional[float] = None,
              check: bool = True) -> Dict[str, Any]:
-        """Join all processes; return rank 0's stats.  Stragglers past the
-        deadline are killed (tests must fail fast, not hang).  With
-        ``check``, any unexpected child failure raises ``RuntimeError``
-        (deliberately ``kill()``-ed processes are expected to die)."""
+        """Join all processes; return rank 0's stats (with the merged
+        cross-process metric counters attached when metrics are on).
+        Stragglers past the deadline are killed (tests must fail fast, not
+        hang).  With ``check``, any unexpected child failure raises
+        ``RuntimeError`` (deliberately ``kill()``-ed processes are
+        expected to die)."""
         deadline = time.monotonic() + (
             timeout if timeout is not None else self.run_timeout + 30.0)
         hung = []
@@ -249,7 +270,12 @@ class ProcessGroup:
                 raise RuntimeError(
                     f"rank process(es) failed: exitcodes="
                     f"{self.exitcodes()} reports={results}")
-        return stats if stats is not None else {}
+        out = dict(stats) if stats is not None else {}
+        parts = [(x[1], x[2]) for x in results if x[0] == "metrics"]
+        if parts:
+            from repro.core.metrics import merge_metrics
+            out.update(merge_metrics(parts))
+        return out
 
     def exitcodes(self) -> Dict[int, Optional[int]]:
         """Exit code per *rank* (co-located ranks share their process's)."""

@@ -55,7 +55,16 @@ stream sockets with length-prefixed pickled frames (:mod:`repro.net.frames`):
   balances these across processes, restricted to alive ranks.  The
   parallel ``wire_sent_to``/``wire_recv_from`` vectors count only events
   that crossed (or will cross) a socket — co-located traffic never shows
-  up there, which the placement tests assert.
+  up there, which the placement tests assert.  When a peer process dies,
+  every queued-but-unwritten user event to it is counted in ``dropped``
+  exactly once: the send queue is drained under its condition variable
+  with a dead flag raised first, so a send racing the death verdict is
+  counted as dropped at enqueue instead of lingering unwritten (which
+  would stall the detector to timeout).  The same accounting feeds the
+  observability layer: :meth:`metrics` reports per-peer wire bytes,
+  write batches, and the send-queue high-water mark alongside the
+  wire/loopback event totals, so ``Session.stats()`` can show where the
+  bytes went without any extra bookkeeping on the hot path.
 
 Payloads must be picklable; :meth:`validate_payload` enforces this at
 ``ctx.fire()`` time so the error surfaces in the firing task.
@@ -171,6 +180,15 @@ class SocketTransport(Transport):
         self._sendq: Dict[int, deque] = {p: deque() for p in peers}
         self._sendcv = {p: threading.Condition() for p in peers}
         self._wbusy = {p: False for p in peers}  # writer mid-write
+        #: set (under the peer's send condvar) when the peer's queue was
+        #: dropped on death: an enqueue that raced the verdict counts its
+        #: events dropped instead of queueing them forever-unwritten
+        self._q_dead = {p: False for p in peers}
+        # per-peer wire-level observability (bytes handed to the kernel,
+        # write batches, send-queue high-water mark)
+        self._m_wire_bytes = {p: 0 for p in peers}
+        self._m_writes = {p: 0 for p in peers}
+        self._m_sendq_max = {p: 0 for p in peers}
 
         self._hb_interval = hb_interval
         self._hb_timeout = hb_timeout
@@ -346,11 +364,23 @@ class SocketTransport(Transport):
         """Append items to peer process ``proc``'s send queue in one lock
         round-trip.  Items are either a :class:`Message` (owned payload;
         the writer encodes it late with out-of-band buffers) or ``("enc",
-        pieces, n_events)`` (a pre-encoded snapshot frame)."""
+        pieces, n_events)`` (a pre-encoded snapshot frame).
+
+        If the peer died and its queue was already dropped, the items are
+        counted as dropped *here* instead of being queued: the lock-free
+        dead check in ``send`` can race the death verdict, and an event
+        parked on a dead queue would otherwise be counted neither sent-on
+        nor dropped — unbalancing the termination accounting."""
         cv = self._sendcv[proc]
         with cv:
-            self._sendq[proc].extend(items)
-            cv.notify_all()
+            if not self._q_dead[proc]:
+                q = self._sendq[proc]
+                q.extend(items)
+                if len(q) > self._m_sendq_max[proc]:
+                    self._m_sendq_max[proc] = len(q)
+                cv.notify_all()
+                return
+        self._count_items_dropped(items)
 
     def _count_items_dropped(self, items) -> None:
         """Account queue items that will never reach the wire."""
@@ -365,11 +395,16 @@ class SocketTransport(Transport):
                 self._dropped += n
 
     def _drop_queue(self, proc: int) -> None:
-        """Discard ``proc``'s queued sends, counting user events dropped."""
+        """Discard ``proc``'s queued sends, counting user events dropped.
+        Raises the queue's dead flag under the condvar first, so any
+        concurrent ``_enqueue`` either lands before the drain (counted
+        here) or observes the flag and counts itself — every discarded
+        event is accounted exactly once either way."""
         cv = self._sendcv.get(proc)
         if cv is None:
             return
         with cv:
+            self._q_dead[proc] = True
             items = list(self._sendq[proc])
             self._sendq[proc].clear()
             cv.notify_all()
@@ -424,7 +459,7 @@ class SocketTransport(Transport):
                     self._count_items_dropped(items)
                     return
                 try:
-                    self._write_items(sock, items)
+                    self._write_items(peer, sock, items)
                 except OSError:
                     with self._mu:
                         closing = self._closing
@@ -440,7 +475,8 @@ class SocketTransport(Transport):
                     self._wbusy[peer] = False
                     cv.notify_all()
 
-    def _write_items(self, sock: socket.socket, items: List) -> None:
+    def _write_items(self, peer: int, sock: socket.socket,
+                     items: List) -> None:
         pieces: List = []
         run: List[Message] = []
         run_bytes = 0
@@ -474,7 +510,14 @@ class SocketTransport(Transport):
                 flush_run()
                 pieces.extend(it[1])
         flush_run()
+        nbytes = 0
+        for p in pieces:
+            nbytes += len(p) if isinstance(p, (bytes, bytearray)) \
+                else memoryview(p).nbytes
         self._sendall_vec(sock, pieces)
+        with self._mu:
+            self._m_wire_bytes[peer] += nbytes
+            self._m_writes[peer] += 1
 
     @staticmethod
     def _sendall_vec(sock: socket.socket, pieces: List) -> None:
@@ -671,8 +714,10 @@ class SocketTransport(Transport):
             with self._mu:
                 self._dropped += 1
             return False
-        if msg.kind == EVENT:
-            with self._mu:
+        with self._mu:
+            self._m_wire_bytes[proc] += len(data)
+            self._m_writes[proc] += 1
+            if msg.kind == EVENT:
                 self._sent_to[dst] += 1
                 self._wire_sent_to[dst] += 1
         return True
@@ -718,6 +763,8 @@ class SocketTransport(Transport):
                     self._dropped += len(ms)
                 continue
             with self._mu:
+                self._m_wire_bytes[proc] += len(blob)
+                self._m_writes[proc] += 1
                 for m in ms:
                     if m.kind == EVENT:
                         self._sent_to[m.dst] += 1
@@ -844,6 +891,29 @@ class SocketTransport(Transport):
         """Per-source count of user events that arrived over a socket."""
         with self._mu:
             return list(self._wire_recv_from)
+
+    def metrics(self) -> dict:
+        """Wire-level observability snapshot for this process (consumed by
+        ``Runtime.metrics()`` / ``Session.stats()``): event totals split
+        wire vs loopback, drop count, and per-peer-process bytes, write
+        batches, and send-queue high-water mark."""
+        with self._mu:
+            return {
+                "kind": "socket",
+                "coalesce": self.coalesce,
+                "wire_events_sent": sum(self._wire_sent_to),
+                "wire_events_recv": sum(self._wire_recv_from),
+                "loopback_events": (sum(self._sent_to)
+                                    - sum(self._wire_sent_to)),
+                "dropped": self._dropped,
+                "wire_bytes": sum(self._m_wire_bytes.values()),
+                "writes": sum(self._m_writes.values()),
+                "sendq_max": max(self._m_sendq_max.values(), default=0),
+                "peers": {p: {"wire_bytes": self._m_wire_bytes[p],
+                              "writes": self._m_writes[p],
+                              "sendq_max": self._m_sendq_max[p]}
+                          for p in self._peers},
+            }
 
     # -------------------------------------------------------------- close
     def close(self) -> None:

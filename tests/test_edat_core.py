@@ -12,9 +12,10 @@ from repro import edat
 
 
 def run(n_ranks, main, workers=2, timeout=30.0, **kw):
-    rt = edat.Runtime(n_ranks, workers_per_rank=workers, **kw)
-    stats = rt.run(main, timeout=timeout)
-    return rt, stats
+    with edat.Session(n_ranks, workers_per_rank=workers, timeout=timeout,
+                      **kw) as s:
+        stats = s.run(main)
+    return s, stats
 
 
 # ---------------------------------------------------------------- Listing 4
@@ -573,11 +574,11 @@ def test_timer_cancel_before_firing():
             res["cancelled"] = h.cancel()
             res["again"] = h.cancel()      # second cancel: already cancelled
 
-    rt = edat.Runtime(1, workers_per_rank=2)
+    s = edat.Session(1, workers_per_rank=2)
     t0 = time.monotonic()
     with pytest.raises(edat.EdatDeadlockError):
         # the task's dep can never be met once the timer is cancelled
-        rt.run(main, timeout=20)
+        s.run(main, timeout=20)
     assert res.get("cancelled") is True
     assert res.get("again") is False
     assert "fired" not in res
@@ -653,15 +654,15 @@ def test_rank_failure_event_and_drop():
     def main(ctx):
         ctx.submit(on_fail, deps=[(edat.ANY, edat.RANK_FAILED)])
 
-    rt = edat.Runtime(3, workers_per_rank=1)
+    s = edat.Session(3, workers_per_rank=1)
 
     def main2(ctx):
         main(ctx)
         if ctx.rank == 0:
             time.sleep(0.1)
-            rt.kill_rank(2)
+            s.runtime.kill_rank(2)
 
-    rt.run(main2, timeout=30)
+    s.run(main2, timeout=30)
     assert sorted(seen) == [(0, 2), (1, 2)]
 
 

@@ -70,8 +70,8 @@ def test_exactly_once_and_termination(prog):
             if src == ctx.rank:
                 ctx.fire(dst, eid, val)
 
-    rt = edat.Runtime(n_ranks, workers_per_rank=2)
-    stats = rt.run(main, timeout=60)
+    with edat.Session(n_ranks, workers_per_rank=2, timeout=60) as s:
+        stats = s.run(main)
     total_tasks = sum(len(v) for v in tasks.values())
     assert len(executed) == total_tasks                      # (2)
     assert sorted(consumed) == sorted(v for *_x, v in fires)  # (1)
@@ -102,9 +102,10 @@ def test_fifo_per_src_dst(n_ranks, n_msgs, worker_poll):
         for i in range(n_msgs):
             ctx.fire((ctx.rank + 1) % ctx.n_ranks, "m", (ctx.rank, i))
 
-    rt = edat.Runtime(n_ranks, workers_per_rank=workers,
-                      progress="worker" if worker_poll else "thread")
-    rt.run(main, timeout=60)
+    with edat.Session(n_ranks, workers_per_rank=workers,
+                      progress="worker" if worker_poll else "thread",
+                      timeout=60) as s:
+        s.run(main)
     for (src, dst), seq in got.items():
         assert seq == sorted(seq), f"FIFO violated {src}->{dst}"
     assert sum(len(v) for v in got.values()) == n_ranks * n_msgs

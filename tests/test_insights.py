@@ -1,0 +1,165 @@
+"""Golden tests for ``repro.insights``: four canonical runs, each built to
+trip exactly one rule (or none), on both transports.  The point is
+end-to-end: real counters out of ``Session.stats()`` drive the rules, so
+a drift in either the metrics plumbing or the rule thresholds shows up
+here — not just in synthetic-dict unit tests (which run first, below).
+"""
+import functools
+import time
+
+import pytest
+
+from repro import edat
+from repro.insights import Finding, analyze, render
+
+pytestmark = pytest.mark.timeout(120)
+
+TRANSPORTS = ("inproc", "socket")
+
+
+# ------------------------------------------------------------- unit: rules
+def _stats(channels=None, ranks=None, transport=None):
+    return {"channels": channels or {}, "ranks": ranks or {},
+            "transport": transport or {"kind": "inproc"}}
+
+
+def test_analyze_empty_and_metrics_off():
+    assert analyze({}) == []
+    assert analyze({"run_seconds": 0.1}) == []   # metrics=False stats
+
+
+def test_analyze_skips_machine_channels():
+    ch = {"__sess.result": {"fires": 10_000, "bytes": 0, "queued_max": 9999}}
+    assert analyze(_stats(channels=ch)) == []
+
+
+def test_spam_precedence_over_backpressure():
+    ch = {"tick": {"fires": 1000, "bytes": 8000, "deliveries": 1000,
+                   "queued_max": 900}}
+    rules = [f.rule for f in analyze(_stats(channels=ch))]
+    assert rules == ["scalar-spam"]   # depth 900 not double-reported
+
+
+def test_straggler_needs_three_ranks_and_dominance():
+    ranks = {0: {"quorum_wait_s": 0.4}, 1: {"quorum_wait_s": 0.4}}
+    assert analyze(_stats(ranks=ranks)) == []            # only 2 ranks
+    ranks = {0: {"quorum_wait_s": 0.05}, 1: {"quorum_wait_s": 0.05},
+             2: {"quorum_wait_s": 0.06}}
+    assert analyze(_stats(ranks=ranks)) == []            # no dominant share
+    ranks[2]["quorum_wait_s"] = 0.5
+    (f,) = analyze(_stats(ranks=ranks))
+    assert f.rule == "straggler" and f.data["rank"] == 2
+    assert "rank 2" in str(f)
+
+
+def test_render_shapes():
+    assert "healthy" in render([])
+    out = render([Finding("backpressure", "channel 'g' backpressured")])
+    assert out.startswith("- **backpressure**")
+
+
+# --------------------------------------------------- golden runs (mains are
+# module level: the socket axis pickles them into spawned rank processes)
+
+def _backpressure_main(ctx, n=700):
+    if ctx.rank == 0:
+        def slow_sink(c, events):
+            time.sleep(0.002)
+        ctx.submit_persistent(slow_sink, deps=[(1, "bulk")])
+    else:
+        payload = b"x" * 1024          # fat enough to dodge the spam rule
+        for _ in range(n):
+            ctx.fire(0, "bulk", payload)
+
+
+def _spam_main(ctx, n=2000):
+    if ctx.rank == 0:
+        ctx.submit_persistent(lambda c, e: None, deps=[(1, "tick")])
+    else:
+        for i in range(n):
+            ctx.fire(0, "tick", i)     # 8 B scalars
+
+
+def _straggler_main(ctx, delay=0.25):
+    if ctx.rank == 0:
+        ctx.submit(lambda c, e: None, deps=[(1, "a"), (2, "a"), (3, "a")])
+    else:
+        if ctx.rank == 3:
+            time.sleep(delay)          # the frame waits on rank 3's event
+        ctx.fire(0, "a", b"x" * 100)
+
+
+def _clean_main(ctx, hops=50):
+    nxt = (ctx.rank + 1) % ctx.n_ranks
+
+    def relay(c, events):
+        d = events[0].data
+        if d["i"] < hops:
+            c.fire(nxt, "tok", {"i": d["i"] + 1, "pad": d["pad"]})
+
+    ctx.submit_persistent(relay, deps=[((ctx.rank - 1) % ctx.n_ranks,
+                                        "tok")])
+    if ctx.rank == 0:
+        ctx.fire(1, "tok", {"i": 0, "pad": b"x" * 100})
+
+
+def _chatty_main(ctx, n=1200):
+    if ctx.rank == 0:
+        ctx.submit_persistent(lambda c, e: None, deps=[(1, "w")])
+    else:
+        payload = b"x" * 64            # fat enough to dodge the spam rule
+        for _ in range(n):
+            ctx.fire(0, "w", payload)
+
+
+def _golden(main, *, ranks=2, transport="inproc", **kw):
+    with edat.Session(ranks, transport=transport, timeout=120, **kw) as s:
+        s.run(main)
+        return s.stats
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_golden_backpressure(transport):
+    stats = _golden(_backpressure_main, transport=transport)
+    findings = analyze(stats)
+    assert [f.rule for f in findings] == ["backpressure"]
+    (f,) = findings
+    assert f.data["eid"] == "bulk" and f.data["queued_max"] >= 512
+    if transport == "socket":
+        assert "max_batch_bytes" in f.message
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_golden_scalar_spam(transport):
+    stats = _golden(_spam_main, transport=transport)
+    findings = analyze(stats)
+    assert [f.rule for f in findings] == ["scalar-spam"]
+    assert findings[0].data["eid"] == "tick"
+    assert "fire_batch" in findings[0].message
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_golden_straggler(transport):
+    stats = _golden(_straggler_main, ranks=4, transport=transport)
+    findings = analyze(stats)
+    assert [f.rule for f in findings] == ["straggler"]
+    assert findings[0].data["rank"] == 3
+    assert "rank 3" in findings[0].message
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_golden_clean_run(transport):
+    stats = _golden(_clean_main, ranks=4, transport=transport)
+    assert analyze(stats) == []
+
+
+def test_golden_chatty_no_coalesce():
+    stats = _golden(_chatty_main, transport="socket", coalesce=False)
+    findings = analyze(stats)
+    rules = [f.rule for f in findings]
+    assert "chatty-no-coalesce" in rules
+    # a slow receiver may legitimately also backlog past the backpressure
+    # threshold during the un-coalesced flood — but nothing else may fire
+    assert set(rules) <= {"chatty-no-coalesce", "backpressure"}
+    chatty = next(f for f in findings if f.rule == "chatty-no-coalesce")
+    assert chatty.data["wire_events_sent"] >= 1000

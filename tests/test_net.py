@@ -208,7 +208,9 @@ def _dual_runtime_run(main, *, n=2, progress="thread", timeout=30.0, **kw):
 
     def go(i):
         try:
-            results[i] = ("ok", rts[i].run(main, timeout=timeout))
+            # transport injection is below the Session surface: drive the
+            # runtime's internal entry point directly, not the v1 shim
+            results[i] = ("ok", rts[i]._run_internal(main, timeout=timeout))
         except BaseException as e:  # noqa: BLE001
             results[i] = ("err", e)
 
@@ -307,8 +309,8 @@ def test_fire_unpicklable_inproc_keeps_copy_semantics():
         else:
             ctx.submit(sink, deps=[(0, "fn")])
 
-    rt = edat.Runtime(2, workers_per_rank=2)
-    rt.run(main, timeout=30)
+    with edat.Session(2, workers_per_rank=2) as s:
+        s.run(main, timeout=30)
     assert got == [42]
 
 
@@ -454,7 +456,7 @@ def test_minimal_transport_end_to_end(progress):
 
     rt = edat.Runtime(2, transport=MinimalTransport(2), progress=progress,
                       unconsumed="ignore")
-    rt.run(main, timeout=60)
+    rt._run_internal(main, timeout=60)
     assert got == list(range(1, N + 1))
 
 
@@ -693,3 +695,86 @@ def test_distributed_coalesced_stream_both_modes(progress):
     res = _dual_runtime_run(main, progress=progress)
     assert [r[0] for r in res] == ["ok", "ok"]
     assert got == list(range(N))
+
+
+# --------------------------------- drop accounting when a peer dies mid-run
+def test_drop_queue_exactly_once_under_enqueue_race():
+    """Events parked on a dead peer's coalescing queue are counted dropped
+    exactly once — whether the death verdict drained them, or the enqueue
+    lost the race and observed the queue's dead flag."""
+    ta, tb = _pair(coalesce=True, flush_interval=5.0)
+    try:
+        for i in range(5):
+            assert ta.send(_ev(0, 1, "q", i))
+        # all 5 sit unwritten (the writer waits out flush_interval)
+        ta._declare_proc_dead(1)
+        assert ta.dropped == 5                  # drained queue, counted once
+        # an enqueue that lost the race against the verdict accounts its
+        # own items instead of parking them on the dead queue
+        ta._enqueue(1, [_ev(0, 1, "q", 99)])
+        assert ta.dropped == 6
+        t0 = time.monotonic()
+        assert ta.flush(timeout=5.0) is True    # nothing left to drain
+        assert time.monotonic() - t0 < 1.0
+    finally:
+        ta.close()
+        tb.close()
+
+
+def test_flush_unblocks_when_peer_dies_mid_drain():
+    ta, tb = _pair(coalesce=True, flush_interval=5.0)
+    try:
+        for i in range(3):
+            assert ta.send(_ev(0, 1, "q", i))
+        res = {}
+
+        def fl():
+            res["ok"] = ta.flush(timeout=10.0)
+
+        th = threading.Thread(target=fl)
+        th.start()
+        time.sleep(0.2)                 # flush is now waiting on the queue
+        ta._declare_proc_dead(1)
+        th.join(3.0)
+        assert not th.is_alive(), "flush hung on a dead peer's queue"
+        assert ta.dropped == 3          # the waited-on events were counted
+    finally:
+        ta.close()
+        tb.close()
+
+
+def _flood_main(ctx, ready_path=""):
+    if ctx.rank == 0:
+        def sink(c, events):
+            if not os.path.exists(ready_path):
+                open(ready_path, "w").close()
+        ctx.submit_persistent(sink, deps=[(1, "flood")])
+        ctx.submit(lambda c, e: None, deps=[(edat.ANY, edat.RANK_FAILED)])
+    else:
+        payload = b"x" * 512
+        for _ in range(20000):
+            ctx.fire(0, "flood", payload)
+
+
+def test_kill_mid_flood_terminates_with_balanced_drops(tmp_path):
+    """Chaos: SIGKILL the producer while its coalescing queue is loaded.
+    The round must still reach global termination well inside the run
+    deadline — which it only can if every in-flight event was counted
+    either received or dropped (the Mattern condition), i.e. nothing was
+    double-counted or lost by the queue-drop path."""
+    from repro import edat as _edat
+    ready = str(tmp_path / "ready")
+    with _edat.Session(2, transport="socket", timeout=120,
+                       hb_interval=0.2, hb_timeout=1.5, unconsumed="ignore",
+                       flush_interval=0.005, max_batch_bytes=32768) as s:
+        s.start(functools.partial(_flood_main, ready_path=ready))
+        deadline = time.monotonic() + 60
+        while not os.path.exists(ready) and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert os.path.exists(ready), "flood never reached the sink"
+        s.kill(1)
+        t0 = time.monotonic()
+        stats = s.wait(timeout=60, check=False)
+        assert time.monotonic() - t0 < 45      # terminated, not timed out
+        assert s.exitcodes()[1] not in (None, 0)
+        assert stats.get("events_received", 0) > 0

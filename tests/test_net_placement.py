@@ -173,7 +173,7 @@ def test_colocated_runtime_exchange_zero_wire_frames():
     results = [None, None]
 
     def go(i):
-        results[i] = rts[i].run(main, timeout=60)
+        results[i] = rts[i]._run_internal(main, timeout=60)
 
     ths = [threading.Thread(target=go, args=(i,)) for i in range(2)]
     for t in ths:
@@ -220,7 +220,7 @@ def test_colocated_fire_and_forget_snapshot():
     results = [None, None]
 
     def go(i):
-        results[i] = rts[i].run(main, timeout=30)
+        results[i] = rts[i]._run_internal(main, timeout=30)
 
     ths = [threading.Thread(target=go, args=(i,)) for i in range(2)]
     for t in ths:

@@ -8,9 +8,9 @@ from repro.core import patterns
 
 
 def run(n, main, **kw):
-    rt = edat.Runtime(n, workers_per_rank=2, **kw)
-    rt.run(main, timeout=60)
-    return rt
+    with edat.Session(n, workers_per_rank=2, timeout=60, **kw) as s:
+        s.run(main)
+    return s
 
 
 def test_barrier_runs_once_per_rank():

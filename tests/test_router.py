@@ -99,9 +99,10 @@ def test_router_persistent_frame_refill():
 
 # ------------------------------------------------------------ end-to-end
 def run(n_ranks, main, workers=2, timeout=30.0, **kw):
-    rt = edat.Runtime(n_ranks, workers_per_rank=workers, **kw)
-    stats = rt.run(main, timeout=timeout)
-    return rt, stats
+    with edat.Session(n_ranks, workers_per_rank=workers, timeout=timeout,
+                      **kw) as s:
+        stats = s.run(main)
+    return s, stats
 
 
 def test_precedence_identical_through_indexed_path():

@@ -14,6 +14,9 @@ handles, driver-side futures — and the v1 deprecation shims.
   ``distributed_insitu``, ``distributed_train``) warn exactly once per
   call site with unchanged behaviour.
 """
+import functools
+import os
+import time
 import warnings
 
 import numpy as np
@@ -296,3 +299,48 @@ def test_distributed_train_shim_warns_and_behaves(tmp_path):
     assert (tmp_path / "out" / "history.json").exists()
     with np.load(tmp_path / "out" / "final_rank0.npz") as z:
         assert int(z["step"]) >= 2 and len(z.files) > 1
+
+
+# --------------------------------------------- future timeout / dead ranks
+def _slow_call(ctx, events):
+    time.sleep(2.0)
+    return 42
+
+
+def _ready_then_hang(ctx, events, path=None):
+    open(path, "w").close()            # handshake: the driver may kill now
+    time.sleep(60)
+    return "unreachable"               # pragma: no cover - rank is killed
+
+
+@pytest.mark.timeout(120)
+def test_future_result_timeout_is_retryable():
+    """result(timeout) on a still-running socket round raises TimeoutError
+    without tearing the round down: a later result() call succeeds."""
+    with edat.Session(ranks=2, transport="socket", timeout=60) as s:
+        fut = s.call(1, _slow_call)
+        s.start(None)                  # calls-only round, non-blocking
+        t0 = time.monotonic()
+        with pytest.raises(TimeoutError, match="retry"):
+            fut.result(timeout=0.3)
+        assert time.monotonic() - t0 < 1.5   # soft join, no SIGKILL wait
+        assert fut.result(timeout=60) == 42  # round finished; same future
+
+
+@pytest.mark.timeout(120)
+def test_future_result_names_dead_rank(tmp_path):
+    """When the callee rank's process dies before the call's task returns,
+    result() raises RankDiedError naming the rank — not a bare timeout."""
+    ready = str(tmp_path / "ready")
+    with edat.Session(ranks=2, transport="socket", timeout=60,
+                      hb_interval=0.2, hb_timeout=1.5) as s:
+        fut = s.call(1, functools.partial(_ready_then_hang, path=ready))
+        s.start(None)
+        deadline = time.monotonic() + 30
+        while not os.path.exists(ready) and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert os.path.exists(ready), "callee task never started"
+        s.kill(1)
+        s.wait(check=False)            # survivors terminate the round
+        with pytest.raises(edat.RankDiedError, match="rank 1"):
+            fut.result()
