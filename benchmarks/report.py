@@ -29,6 +29,26 @@ def dryrun_table(dirpath: str) -> str:
     return hdr + "\n" + "\n".join(rows)
 
 
+def serve_table(path: str) -> str:
+    """Markdown table from a ``benchmarks/serve_load.py`` JSON dump:
+    one row per (impl, offered rps), plus any insights findings."""
+    r = json.load(open(path))
+    hdr = ("| impl | rps | req/s | tok/s | TTFT p50 ms | TTFT p99 ms | "
+           "tok p50 ms | tok p99 ms |\n|---|---|---|---|---|---|---|---|")
+    rows = [
+        f"| {x['impl']} | {x['rps']:.0f} | {x['requests_per_s']:.2f} "
+        f"| {x['tokens_per_s']:.1f} | {x['ttft_p50_ms']:.1f} "
+        f"| {x['ttft_p99_ms']:.1f} | {x['per_token_p50_ms']:.2f} "
+        f"| {x['per_token_p99_ms']:.2f} |"
+        for x in r["rows"]]
+    out = hdr + "\n" + "\n".join(rows)
+    if r.get("findings"):
+        out += "\n\nInsights:\n" + "".join(
+            f"- `{f['impl']}` @ {f['rps']:.0f} rps — **{f['rule']}**: "
+            f"{f['message']}\n" for f in r["findings"])
+    return out
+
+
 def insights_section(stats, title: str = "Runtime insights") -> str:
     """Markdown section running repro.insights over one run's
     ``Session.stats()`` mapping (pass the dict, or a path to a JSON

@@ -57,6 +57,18 @@ def main(argv=None):
                         out=os.path.join(args.outdir,
                                          "trainer_socket.json"))
 
+    print("== LM serving under open-loop load (event-driven vs "
+          "sequential) ==")
+    from benchmarks import serve_load
+    if args.full:
+        serve_load.run(rps=(4.0, 8.0, 16.0), requests=32,
+                       transports=("inproc", "socket"), insights=True,
+                       out=os.path.join(args.outdir, "serve_load.json"))
+    else:
+        serve_load.run(rps=(8.0,), requests=12, transports=("inproc",),
+                       insights=True,
+                       out=os.path.join(args.outdir, "serve_load.json"))
+
     print("== roofline (from dry-run artifacts, if present) ==")
     from benchmarks import roofline
     for mesh in ("pod16x16", "pod2x16x16"):

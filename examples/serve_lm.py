@@ -1,152 +1,62 @@
-"""Event-driven serving: continuous batching driven by EDAT events.
+"""Event-driven LM serving: continuous batching driven by EDAT events.
 
-Client ranks fire request events at random times; the server rank's
-batcher task admits them into decode slots, a persistent decode task steps
-the whole batch through ``serve_step`` (one jitted token step with a KV
-cache), and completions are fired back as response events — the paper's
-fire-and-forget interaction end to end.
+Thin CLI over :mod:`repro.serve` — the promoted, tested subsystem this
+example used to sketch.  Client ranks replay an open-loop Poisson
+schedule of request events; the server rank admits them into decode
+slots, a single self-sustaining ``decode_tick`` chain steps the whole
+batch one greedy token at a time, and completions fire back as response
+events — the paper's fire-and-forget interaction end to end, with
+event-carried backpressure when the admission queue outgrows its bound.
 
   PYTHONPATH=src python examples/serve_lm.py --arch gemma3-1b --requests 12
+  PYTHONPATH=src python examples/serve_lm.py --transport socket --procs 2
 """
 import argparse
-import threading
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro import edat
-from repro.configs import ARCHS, reduce_cfg
-from repro.models import build_model
-from repro.train import make_serve_step
-
-MAX_LEN = 128
-
-
-class Server:
-    def __init__(self, cfg, slots: int, max_new: int):
-        self.cfg = cfg
-        self.model = build_model(cfg)
-        self.params = self.model.init(jax.random.PRNGKey(0))
-        self.slots = slots
-        self.max_new = max_new
-        self.serve_step = jax.jit(make_serve_step(self.model))
-        self.caches = self.model.init_cache(slots, MAX_LEN)
-        self.tokens = jnp.zeros((slots, 1), jnp.int32)
-        self.pos = jnp.zeros((slots, 1), jnp.int32)
-        self.live = [None] * slots          # per-slot (req_id, client, left)
-        self.queue = []
-        self.served = 0
-
-    # -- EDAT tasks -----------------------------------------------------------
-    # server state is guarded by an EDAT named lock (paper §IV.C):
-    # auto-released at task end, so request/tick tasks serialise cleanly
-    # even with multiple workers.
-    def on_request(self, ctx, events):
-        ctx.lock("server")
-        req = events[0].data
-        self.queue.append((req, events[0].source))
-        self._admit(ctx)
-        if not any(self.live):
-            return
-        ctx.fire(edat.SELF, "tick")
-
-    def _admit(self, ctx):
-        # demo simplification: slots are conditioned on the prompt's last
-        # token only (weights are random-init; the event-driven batching
-        # mechanics, not output quality, are what this example shows).
-        for i in range(self.slots):
-            if self.live[i] is None and self.queue:
-                (req, client) = self.queue.pop(0)
-                prompt = req["prompt"]
-                self.tokens = self.tokens.at[i, 0].set(prompt[-1])
-                self.pos = self.pos.at[i, 0].set(len(prompt) - 1)
-                self.live[i] = {"id": req["id"], "client": client,
-                                "left": self.max_new, "out": []}
-
-    def on_tick(self, ctx, events):
-        ctx.lock("server")
-        if not any(self.live):
-            return
-        nxt, self.caches = self.serve_step(self.params, self.caches,
-                                           self.tokens, self.pos)
-        self.tokens = nxt
-        self.pos = self.pos + 1
-        done_any = False
-        for i, st in enumerate(self.live):
-            if st is None:
-                continue
-            st["out"].append(int(nxt[i, 0]))
-            st["left"] -= 1
-            if st["left"] <= 0:
-                ctx.fire(st["client"], "response",
-                         {"id": st["id"], "tokens": st["out"]})
-                self.live[i] = None
-                self.served += 1
-                done_any = True
-        if done_any:
-            self._admit(ctx)
-        if any(self.live):
-            ctx.fire(edat.SELF, "tick")
+from repro.configs import ARCHS
+from repro.serve import DEFAULT_MAX_LEN, LoadSpec, run_serve
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-1b", choices=sorted(ARCHS))
     ap.add_argument("--clients", type=int, default=2)
-    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="total requests across all clients")
+    ap.add_argument("--rps", type=float, default=8.0,
+                    help="aggregate offered request rate")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=DEFAULT_MAX_LEN)
+    ap.add_argument("--queue-bound", type=int, default=8)
+    ap.add_argument("--transport", choices=("inproc", "socket"),
+                    default="inproc")
+    ap.add_argument("--procs", type=int, default=None,
+                    help="processes for socket runs")
     args = ap.parse_args()
 
-    cfg = reduce_cfg(ARCHS[args.arch].cfg).replace(
-        frontend="none", n_frontend_tokens=0, encdec=False,
-        max_target_length=MAX_LEN)
-    server = Server(cfg, args.slots, args.max_new)
-    n_ranks = 1 + args.clients
-    got = []
-    lat = {}
-    mu = threading.Lock()
-
-    def main_fn(ctx):
-        if ctx.rank == 0:
-            ctx.submit_persistent(server.on_request,
-                                  deps=[(edat.ANY, "request")], name="req")
-            ctx.submit_persistent(server.on_tick,
-                                  deps=[(edat.SELF, "tick")], name="tick")
-        else:
-            def on_response(ctx2, events):
-                r = events[0].data
-                with mu:
-                    got.append(r)
-                    lat[r["id"]] = time.monotonic() - lat[r["id"]]
-            ctx.submit_persistent(on_response,
-                                  deps=[(0, "response")], name="resp")
-            rng = np.random.default_rng(ctx.rank)
-            per = args.requests // args.clients
-            for i in range(per):
-                rid = ctx.rank * 1000 + i
-                with mu:
-                    lat[rid] = time.monotonic()
-                ctx.fire(0, "request",
-                         {"id": rid,
-                          "prompt": rng.integers(
-                              0, cfg.vocab, size=4).tolist()})
-                time.sleep(float(rng.random()) * 0.05)
-
-    t0 = time.monotonic()
-    edat.run(main_fn, ranks=n_ranks, workers_per_rank=2,
-             unconsumed="ignore", timeout=600)
-    dt = time.monotonic() - t0
-    n_tokens = sum(len(r["tokens"]) for r in got)
-    print(f"served {len(got)} requests / {n_tokens} tokens in {dt:.2f}s "
-          f"({n_tokens / dt:.1f} tok/s, batch slots={args.slots})")
-    if lat:
-        vals = sorted(lat.values())
-        print(f"latency p50={vals[len(vals)//2]*1e3:.0f}ms "
-              f"p max={vals[-1]*1e3:.0f}ms")
-    assert len(got) == (args.requests // args.clients) * args.clients
+    load = LoadSpec(rps=args.rps, requests=args.requests,
+                    max_new_lo=max(1, args.max_new // 2),
+                    max_new_hi=args.max_new)
+    out = run_serve(arch=args.arch, clients=args.clients, slots=args.slots,
+                    max_len=args.max_len, load=load,
+                    queue_bound=args.queue_bound,
+                    transport=args.transport, procs=args.procs)
+    res, s = out["result"], out["summary"]
+    print(f"served {res['served']} requests / {s['tokens']} tokens in "
+          f"{s['wall_s']:.2f}s serving window "
+          f"({s['tokens_per_s']:.1f} tok/s, batch slots={res['slots']}, "
+          f"{args.transport})")
+    print(f"ttft p50={s['ttft_p50_ms']:.0f}ms p99={s['ttft_p99_ms']:.0f}ms "
+          f"per-token p50={s['per_token_p50_ms']:.2f}ms "
+          f"p99={s['per_token_p99_ms']:.2f}ms")
+    if res["bp_signals"]:
+        print(f"backpressure: {res['bp_signals']} on-signal(s); clients "
+              f"throttled "
+              f"{sum(r['throttled_s'] for r in res['records']):.2f}s total")
+    assert res["served"] == args.requests, res
+    assert res["slots_leaked"] == 0, res
+    assert res["tick_execs"] == res["steps"], res
 
 
 if __name__ == "__main__":

@@ -33,6 +33,11 @@ Rules (each reports the triggering numbers in its message):
   event, attributed to the rank that fired it).
 * **chatty-no-coalesce** — coalescing was disabled while many events
   crossed sockets: every event paid a frame + syscall.
+* **admission-backpressure** — a serving program fired on a
+  ``backpressure`` channel: its admission queue exceeded the configured
+  bound and clients were throttled.  Reported against the ``request``
+  channel (the producer side that outran admission).  Suggests more
+  decode slots, a lower offered rate, or a larger queue bound.
 
 Machine-generated channels (``__``-prefixed eids) are exempt from the
 per-channel rules.
@@ -112,6 +117,23 @@ def analyze(stats: Mapping[str, Any], *,
                 f"not keeping up; {hint}",
                 {"eid": eid, "queued_max": qmax, "fires": fires,
                  "deliveries": ch.get("deliveries", 0)}))
+
+    bp = channels.get("backpressure") or {}
+    bp_fires = bp.get("fires", 0)
+    if bp_fires:
+        req = channels.get("request") or {}
+        findings.append(Finding(
+            "admission-backpressure",
+            f"channel 'request' outran admission: the server fired "
+            f"{bp_fires} backpressure signal(s) because its admission "
+            f"queue exceeded the configured bound "
+            f"(requests fired={req.get('fires', 0)}, admission queue "
+            f"peak={req.get('queued_max', 0)}) — clients were throttled; "
+            f"add decode slots, lower the offered rate, or raise the "
+            f"queue bound",
+            {"eid": "request", "bp_fires": bp_fires,
+             "request_fires": req.get("fires", 0),
+             "queued_max": req.get("queued_max", 0)}))
 
     waits = {r: rk.get("quorum_wait_s", 0.0) for r, rk in ranks.items()}
     total_wait = sum(waits.values())

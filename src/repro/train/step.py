@@ -66,8 +66,14 @@ def make_train_step(model, opt: Optimizer, *, microbatches: int = 1,
     return train_step
 
 
-def make_prefill_step(model) -> Callable:
-    """prefill_step(params, tokens [, frontend]) -> (last_logits, cache)."""
+def make_prefill_step(model, *, max_len: Optional[int] = None) -> Callable:
+    """prefill_step(params, tokens [, frontend]) -> (last_logits, cache).
+
+    ``max_len`` overrides the cache length (default: exactly the prompt).
+    The serving engine passes its decode-cache length here so a prefilled
+    single-request cache has the same per-layer shapes as one batch slot
+    of the decode cache and can be spliced in directly; decoding then
+    continues past the prompt without reallocating."""
 
     def prefill_step(params, batch):
         B, S = batch["tokens"].shape
@@ -78,7 +84,7 @@ def make_prefill_step(model) -> Callable:
             extra["patch_embeds"] = batch["patch_embeds"]
         total = S + (batch.get("patch_embeds").shape[1]
                      if "patch_embeds" in batch else 0)
-        caches = model.init_cache(B, total)
+        caches = model.init_cache(B, max_len or total)
         return model.prefill(params, batch["tokens"], caches, **extra)
 
     return prefill_step

@@ -52,6 +52,22 @@ def test_straggler_needs_three_ranks_and_dominance():
     assert "rank 2" in str(f)
 
 
+def test_admission_backpressure_rule():
+    # any fire on a serving program's 'backpressure' channel means the
+    # admission queue crossed its bound: report against 'request'
+    ch = {"backpressure": {"fires": 3, "bytes": 120, "deliveries": 3},
+          "request": {"fires": 40, "bytes": 9000, "queued_max": 11}}
+    (f,) = analyze(_stats(channels=ch))
+    assert f.rule == "admission-backpressure"
+    assert f.data["eid"] == "request"
+    assert f.data["bp_fires"] == 3 and f.data["request_fires"] == 40
+    assert "throttled" in f.message
+    # no backpressure fires -> no finding
+    ch = {"request": {"fires": 40, "bytes": 9000, "queued_max": 3},
+          "backpressure": {"fires": 0, "bytes": 0}}
+    assert analyze(_stats(channels=ch)) == []
+
+
 def test_render_shapes():
     assert "healthy" in render([])
     out = render([Finding("backpressure", "channel 'g' backpressured")])
