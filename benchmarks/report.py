@@ -49,6 +49,21 @@ def serve_table(path: str) -> str:
     return out
 
 
+def micro_table(path: str) -> str:
+    """Markdown table from a ``benchmarks/runtime_micro.py`` JSON dump —
+    one row per probe.  The overhead A/B probes (always-on metrics,
+    durable task log) carry their acceptance bar so a regression reads
+    off the report directly."""
+    r = json.load(open(path))
+    bars = {"metrics_overhead_pct": "<= 5 %",
+            "durable_overhead_pct": "<= 5 %"}
+    hdr = "| probe | value | bar |\n|---|---|---|"
+    rows = [f"| {k} | " + (f"{v:,.1f}" if abs(v) >= 10 else f"{v:.3f}")
+            + f" | {bars.get(k, '—')} |"
+            for k, v in sorted(r.items())]
+    return hdr + "\n" + "\n".join(rows)
+
+
 def insights_section(stats, title: str = "Runtime insights") -> str:
     """Markdown section running repro.insights over one run's
     ``Session.stats()`` mapping (pass the dict, or a path to a JSON

@@ -21,7 +21,7 @@ def main(argv=None):
     print("== runtime micro-overheads (paper §V overhead discussion) ==")
     from benchmarks import runtime_micro
     runtime_micro.run(out=os.path.join(args.outdir, "runtime_micro.json"),
-                      transport="both")
+                      transport="both", durable=True)
 
     print("== Graph500 BFS: EDAT vs BSP reference (paper Fig 3) ==")
     from benchmarks import bfs_scaling

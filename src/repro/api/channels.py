@@ -32,17 +32,26 @@ class Channel(str):
     ``payload`` is a type (or tuple of types) that ``fire`` payloads must
     satisfy; ``None`` (the default) accepts anything.  A ``None`` payload
     is always allowed — events without data are common (pure signals).
+
+    ``durable=True`` opts just this channel into the durable task log
+    (:mod:`repro.durable`): its fires are journaled and replayed onto
+    survivors (or an elastic replacement) if the consuming rank dies.
+    Durable payloads must pickle even on the inproc transport, and
+    consumers should depend on ``(ANY, channel)`` — replayed events carry
+    the recovery coordinator's rank as their source.
     """
 
-    __slots__ = ("payload",)
+    __slots__ = ("payload", "durable")
 
-    def __new__(cls, eid: str, payload: PayloadSpec = None) -> "Channel":
+    def __new__(cls, eid: str, payload: PayloadSpec = None,
+                durable: bool = False) -> "Channel":
         if eid.startswith("__"):
             raise ValueError(
                 f"channel id {eid!r} is reserved (the __-prefix namespace "
                 f"belongs to runtime-internal and machine-generated events)")
         self = super().__new__(cls, sys.intern(str(eid)))
         self.payload = payload
+        self.durable = bool(durable)
         return self
 
     # -- validation -----------------------------------------------------------
@@ -62,10 +71,13 @@ class Channel(str):
     def __reduce__(self):
         # events carry their eid across the socket transport: reconstruct
         # as a Channel (re-interning the id) rather than a bare str
-        return (Channel, (str.__str__(self), self.payload))
+        return (Channel, (str.__str__(self), self.payload, self.durable))
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
-        if self.payload is None:
-            return f"Channel({str.__repr__(self)})"
-        return (f"Channel({str.__repr__(self)}, "
-                f"payload={getattr(self.payload, '__name__', self.payload)})")
+        extra = ""
+        if self.payload is not None:
+            extra += (f", payload="
+                      f"{getattr(self.payload, '__name__', self.payload)}")
+        if self.durable:
+            extra += ", durable=True"
+        return f"Channel({str.__repr__(self)}{extra})"

@@ -47,7 +47,7 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
 
 from repro.core.event import ANY
 from repro.core.metrics import RunStats, merge_metrics
-from repro.core.runtime import Context, Runtime
+from repro.core.runtime import Context, RankDiedError, Runtime
 
 from .program import DeferredProgram, Program
 
@@ -56,12 +56,11 @@ DepLike = Tuple[Any, str]
 
 _UNSET = object()
 
-
-class RankDiedError(RuntimeError):
-    """A :meth:`Session.call`'s result is unrecoverable because the
-    process hosting the callee rank exited abnormally before the call's
-    task returned.  Distinct from ``TimeoutError`` (the round merely has
-    not finished yet — retry ``result()`` later)."""
+# RankDiedError lives in repro.core.runtime (re-exported here for the
+# stable ``edat.RankDiedError`` surface): the same class covers a driver
+# future whose callee rank's process died AND a survivor rank observing
+# the termination coordinator's death — both "the round cannot complete
+# from this observer's point of view".
 
 
 class Future:
@@ -229,7 +228,9 @@ class Session:
                  host: str = "127.0.0.1",
                  timeout: float = 120.0,
                  metrics: bool = True,
-                 trace: bool = False):
+                 trace: bool = False,
+                 durable: Union[bool, dict, None] = None,
+                 elastic: bool = False):
         if transport not in ("inproc", "socket"):
             raise ValueError(f"unknown transport {transport!r} "
                              f"(expected 'inproc' or 'socket')")
@@ -240,6 +241,10 @@ class Session:
             raise ValueError(
                 "procs/placement require transport='socket' (inproc "
                 "sessions run every rank as a thread in this process)")
+        if transport == "inproc" and elastic:
+            raise ValueError(
+                "elastic=True requires transport='socket' (elastic join "
+                "replaces a dead OS process; inproc ranks are threads)")
         self.ranks = int(ranks)
         self.procs = procs
         self.transport = transport
@@ -259,6 +264,17 @@ class Session:
         #: records bounded per-rank task/event timelines in the stats
         self.metrics = bool(metrics)
         self.trace = bool(trace)
+        #: durable task log + automated replay (:mod:`repro.durable`):
+        #: ``True`` journals every user channel, a dict refines it
+        #: (``path``/``channels``/``all``/``join_timeout``/``settle``).
+        #: Socket rounds default the log to a session-private sqlite file
+        #: shared by every rank process (``durable_log_path``).
+        self.durable = durable
+        #: keep the rank-0 coordinator listening after bootstrap so a
+        #: replacement process can elastically join a running socket
+        #: round (see :meth:`respawn`)
+        self.elastic = bool(elastic)
+        self.durable_log_path: Optional[str] = None
         #: rank-0 run stats of the most recent round.  A callable dict:
         #: ``s.stats["run_seconds"]`` and ``s.stats()`` both work; with
         #: metrics on it also carries the structured ``"channels"`` /
@@ -315,7 +331,8 @@ class Session:
                                     progress=self.progress,
                                     unconsumed=self.unconsumed,
                                     metrics=self.metrics,
-                                    trace=self.trace)
+                                    trace=self.trace,
+                                    durable=self.durable)
         return self._runtime
 
     def run(self, program: Optional[ProgramLike] = None, *,
@@ -387,6 +404,17 @@ class Session:
             max_batch_bytes=self.max_batch_bytes,
             hb_interval=self.hb_interval, hb_timeout=self.hb_timeout,
             metrics=self.metrics, trace=self.trace)
+        if self.elastic:
+            kwargs["elastic"] = True
+        if self.durable:
+            spec = (dict(self.durable) if isinstance(self.durable, dict)
+                    else {})
+            # every rank process appends to one shared sqlite file; it
+            # lives beside the result spool so teardown reaps both
+            spec.setdefault("path",
+                            os.path.join(self._tmpdir, "durable.sqlite"))
+            self.durable_log_path = spec["path"]
+            kwargs["durable"] = spec
         if self.placement_spec is not None:
             kwargs["placement"] = self.placement_spec
         else:
@@ -432,6 +460,17 @@ class Session:
         if self._pg is None:
             raise RuntimeError("no spawned round in flight")
         self._pg.kill(rank)
+
+    def respawn(self, rank: int, ready_file: Optional[str] = None) -> None:
+        """Launch an elastic replacement for the (dead) process that hosted
+        ``rank``; requires ``Session(elastic=True)``.  The newcomer joins
+        the running world mid-round, re-hosts every rank of that process
+        and — in durable mode — drains the replayed backlog.  When
+        ``ready_file`` is given it is touched once the mesh splice is
+        complete."""
+        if self._pg is None:
+            raise RuntimeError("no spawned round in flight")
+        self._pg.respawn(rank, ready_file=ready_file)
 
     @property
     def placement(self) -> Optional[List[Tuple[int, ...]]]:

@@ -30,14 +30,14 @@ patterns (:mod:`.patterns`).
 """
 from .event import ALL, ANY, SELF, RANK_FAILED, Dep, Event, dep
 from .router import EventRouter
-from .runtime import (Context, EdatDeadlockError, EdatTaskError, Runtime,
-                      TaskHandle, TimerHandle)
+from .runtime import (Context, EdatDeadlockError, EdatTaskError,
+                      RankDiedError, Runtime, TaskHandle, TimerHandle)
 from .scheduler import Scheduler
 from .transport import InProcTransport, Message, Transport
 
 __all__ = [
     "ALL", "ANY", "SELF", "RANK_FAILED", "Dep", "Event", "dep",
     "Context", "Runtime", "EdatDeadlockError", "EdatTaskError",
-    "TaskHandle", "TimerHandle",
+    "RankDiedError", "TaskHandle", "TimerHandle",
     "Scheduler", "EventRouter", "InProcTransport", "Message", "Transport",
 ]

@@ -44,6 +44,9 @@ except ImportError:  # pragma: no cover - numpy is a de-facto hard dep
 
 _FIXED8 = frozenset((bool, int, float))
 _SIZED = frozenset((str, bytes, bytearray))
+# Payload types safe to hand to multiple consumers without a defensive
+# copy: nothing can mutate them behind anyone's back.
+_IMMUTABLE = frozenset((bool, int, float, complex, str, bytes, type(None)))
 
 
 def payload_nbytes(data: Any) -> int:
@@ -132,9 +135,18 @@ def merge_metrics(parts: Iterable[Tuple[int, Dict[str, Any]]]
     channels: Dict[str, Dict[str, int]] = {}
     ranks: Dict[int, Dict[str, Any]] = {}
     transport: Dict[str, Any] = {}
+    durable: Dict[str, Any] = {}
     for lead, m in parts:
         if not m:
             continue
+        d = m.get("durable")
+        if d:
+            durable.setdefault("log", d.get("log"))
+            for k in ("appends", "batches"):
+                durable[k] = durable.get(k, 0) + d.get(k, 0)
+            durable["queue_max"] = max(durable.get("queue_max", 0),
+                                       d.get("queue_max", 0))
+            durable.setdefault("replays", []).extend(d.get("replays") or ())
         for eid, ch in (m.get("channels") or {}).items():
             agg = channels.setdefault(eid, _empty_channel())
             for k in ("fires", "bytes", "wire_fires", "deliveries",
@@ -165,4 +177,7 @@ def merge_metrics(parts: Iterable[Tuple[int, Dict[str, Any]]]
                                              t["sendq_max"])
             for p, pm in (t.get("peers") or {}).items():
                 transport.setdefault("peers", {})[f"{lead}->{p}"] = dict(pm)
-    return {"channels": channels, "ranks": ranks, "transport": transport}
+    out = {"channels": channels, "ranks": ranks, "transport": transport}
+    if durable:
+        out["durable"] = durable
+    return out

@@ -33,8 +33,10 @@ trainer built on top.
 """
 from __future__ import annotations
 
+import functools
 import heapq
 import itertools
+import pickle
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
@@ -42,7 +44,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 from .deprecation import warn_deprecated
 from .event import (ALL, ANY, SELF, RANK_FAILED, SYS_PREFIX, TIMER_CANCELLED,
                     Dep, Event, copy_payload)
-from .metrics import _FIXED8, payload_nbytes
+from .metrics import _FIXED8, _IMMUTABLE, payload_nbytes
+from ..durable.log import FIRED
 from .scheduler import Scheduler
 from .transport import CONTROL, EVENT, InProcTransport, Message, Transport
 
@@ -59,6 +62,14 @@ class EdatDeadlockError(RuntimeError):
 
 class EdatTaskError(RuntimeError):
     """A task raised; re-raised from :meth:`Runtime.run`."""
+
+
+class RankDiedError(EdatTaskError):
+    """A rank's process died (SIGKILL, crash, lost heartbeat) and the run
+    cannot complete from this observer's point of view — notably when the
+    dead rank is the termination coordinator (rank 0), whose terminate
+    broadcast will never arrive.  Driver-side ``Future``s surface it; the
+    process launcher treats it as an orderly child outcome (exit 0)."""
 
 
 class TimerHandle:
@@ -139,6 +150,9 @@ class Context:
         collective-pattern eids) are exempt."""
         self._declared = {str(c): (c if hasattr(c, "validate") else None)
                           for c in channels}
+        dur_eids = [str(c) for c in channels if getattr(c, "durable", False)]
+        if dur_eids:
+            self._rt._durable_add(dur_eids)
 
     def _check_eid(self, eid: str) -> None:
         d = self._declared
@@ -278,7 +292,8 @@ class Runtime:
                  transport: Optional[Transport] = None,
                  poll_interval: float = 0.002,
                  metrics: bool = True,
-                 trace: bool = False):
+                 trace: bool = False,
+                 durable: Optional[Union[bool, dict]] = None):
         assert progress in ("thread", "worker")
         assert unconsumed in ("error", "warn", "ignore")
         self.n_ranks = n_ranks
@@ -331,9 +346,24 @@ class Runtime:
         self._remote_error: Optional[str] = None
         self._remote_poke_mu = threading.Lock()
         self._last_remote_poke = 0.0
+        # durable mode (repro.durable): None until activated — either here
+        # (durable=True / an eager spec) or lazily by per-channel opt-in
+        # (Context.declare_channels -> _durable_add)
+        self._durable = None
+        self._durable_spec: Optional[dict] = None
+        self._dur_mu = threading.Lock()
+        if durable:
+            spec = dict(durable) if isinstance(durable, dict) else {}
+            if spec.get("all", True) or spec.get("channels"):
+                self._durable_ensure(spec)
+            else:
+                self._durable_spec = spec
         if self._distributed:
             # heartbeat/EOF peer-failure detection feeds RANK_FAILED
             self.transport.on_peer_dead = self._on_peer_dead
+            if hasattr(self.transport, "on_peer_join"):
+                # elastic join: a replacement process re-hosted a dead rank
+                self.transport.on_peer_join = self._on_peer_joined
             set_deliver = getattr(self.transport, "set_deliver", None)
             if set_deliver is not None:
                 # push mode: the transport's reader threads hand batches
@@ -378,6 +408,110 @@ class Runtime:
             self._epoch += 1
             self._quiet_cv.notify_all()
 
+    # ------------------------------------------------------------ durable
+    def _durable_ensure(self, spec: Optional[dict] = None):
+        """Activate durable mode once (idempotent): build the
+        :class:`repro.durable.DurableState` and hook every local
+        scheduler's consume path so *completed* records follow fires."""
+        with self._dur_mu:
+            if self._durable is None:
+                if spec is None:
+                    spec = self._durable_spec or {"all": False}
+                from repro.durable import DurableState
+                dur = DurableState(self, spec)
+                for r, sch in self._sched.items():
+                    sch.on_consumed = dur.consumed_hook(r)
+                self._durable = dur
+        return self._durable
+
+    def _durable_add(self, eids: Sequence[str]) -> None:
+        """Per-channel opt-in (``Channel(..., durable=True)``), called from
+        ``Context.declare_channels`` on every rank — idempotent."""
+        self._durable_ensure().add_eids(eids)
+
+    def _durable_error(self, exc: BaseException) -> None:
+        with self._err_mu:
+            if self._error is None:
+                self._error = EdatTaskError(f"durable replay failed: {exc}")
+                self._error.__cause__ = exc
+        self._poke(force=True)
+
+    def _durable_plan(self, records, prefer: Optional[int] = None,
+                      targets: Optional[Dict[str, set]] = None
+                      ) -> List[Tuple[object, str, int, object]]:
+        """Destination selection for replay — the pure half of the old
+        ``_durable_refire``, split out so the coordinator can journal the
+        REPLAYED records *before* any event is sent (the in-memory log
+        prunes on completion, so a fast survivor's *completed* append must
+        never reach the queue ahead of the replay record it should prune).
+
+        Dead targets are redirected to ``prefer`` (a freshly joined
+        replacement) when alive, else round-robin over survivors the log
+        has seen consume that channel (``targets``: eid -> historical dst
+        set — a rank that never received the channel likely has no
+        consumer for it).  Returns ``[(key, eid, new_dst, blob), ...]``.
+        """
+        alive = [r for r in range(self.n_ranks) if not self.is_dead(r)]
+        if not alive:
+            return []
+        rr: Dict[str, int] = {}
+        plan: List[Tuple[object, str, int, object]] = []
+        for key, _kind, eid, _osrc, odst, blob in records:
+            if not self.is_dead(odst):
+                dst = odst
+            elif prefer is not None and not self.is_dead(prefer):
+                dst = prefer
+            else:
+                cand = alive
+                if targets:
+                    known = [r for r in alive if r in targets.get(eid, ())]
+                    if known:
+                        cand = known
+                i = rr.get(eid, 0)
+                rr[eid] = i + 1
+                dst = cand[i % len(cand)]
+            plan.append((key, eid, dst, blob))
+        return plan
+
+    def _durable_send(self, plan) -> None:
+        """Re-fire a replay plan (at-least-once — each event keeps its
+        original idempotency key).  Dead *sources* are replaced by this
+        process's lead rank so the Mattern counters stay inside the alive
+        columns."""
+        src = min(self._sched)
+        sch = self._sched[src]
+        for key, eid, dst, blob in plan:
+            # the in-memory backend stores immutable payloads raw (no
+            # pickle roundtrip on the hot path); bytes means pickled
+            data = pickle.loads(blob) if type(blob) is bytes else blob
+            ev = Event(data=data, source=src, eid=eid)
+            ev._dkey = key
+            with sch._mu:
+                sch.sent += 1
+                if sch.metrics_on:
+                    sch.count_fire_locked(
+                        eid, 1, payload_nbytes(data),
+                        0 if dst in self._sched else 1)
+            self.transport.send(Message(EVENT, src, dst, ev))
+
+    def _durable_refire(self, records, prefer: Optional[int] = None,
+                        targets: Optional[Dict[str, set]] = None
+                        ) -> List[Tuple[object, str, int]]:
+        """Plan + send in one step (kept for direct callers/tests; the
+        replay coordinator calls the halves separately so it can journal
+        between them).  Returns ``[(key, eid, new_dst), ...]``."""
+        plan = self._durable_plan(records, prefer=prefer, targets=targets)
+        self._durable_send(plan)
+        return [(key, eid, dst) for key, eid, dst, _blob in plan]
+
+    def _on_peer_joined(self, rank: int) -> None:
+        """Transport elastic-join callback: a replacement process now hosts
+        ``rank``.  Re-arm durable failure handling for it and wake the
+        detector (the alive set just changed under it)."""
+        if self._durable is not None:
+            self._durable.note_joined(rank)
+        self._poke(force=True)
+
     # ------------------------------------------------------------ event path
     def _targets(self, src: int, target: Any) -> List[int]:
         """Expand a fire target; reject out-of-range ranks *before* any
@@ -395,26 +529,89 @@ class Runtime:
 
     def _fire(self, src: int, target: Any, eid: str, data: Any, *,
               persistent: bool, ref: bool) -> None:
+        dur = self._durable
+        if dur is not None:
+            durable = dur._wcache.get(eid)  # inlined wants() fast path
+            if durable is None:
+                durable = dur.wants(eid)
+        else:
+            durable = False
         # validated before the sent counter is touched: a non-transportable
         # payload raises here, in the firing task, with balanced counters
         self.transport.validate_payload(data)
         targets = self._targets(src, target)
-        # a serialising transport pickles every remote message synchronously
-        # inside send — that IS the fire-time snapshot, so the defensive
-        # deep-copy is only needed when some target is hosted by THIS
-        # process (self-sends and co-located ranks take the transport's
-        # loopback, which delivers the object by reference)
-        copy_free = ref or (self.transport.serializes
-                            and all(t not in self._sched for t in targets))
-        payload = data if copy_free else copy_payload(data)
-        # ref=True hands payload ownership over (EDAT_ADDRESS): a deferred-
-        # write transport may then serialise it lazily and zero-copy
-        msgs = [Message(EVENT, src, t,
-                        Event(data=payload if (copy_free or len(targets) == 1)
-                              else copy_payload(payload),
-                              source=src, eid=eid, persistent=persistent),
-                        owned=ref)
-                for t in targets]
+        if durable:
+            # Durable-channel fire: plain semantics plus an idempotency key
+            # stamped on each Event (``_dkey`` lives in the instance
+            # __dict__, so it rides pickle and the in-process loopback
+            # alike) and an off-hot-path *fired* log append.  Keys are
+            # cheap tuples (the sqlite backend stringifies at write time);
+            # immutable payloads skip both the defensive copy and the
+            # fire-time pickle — the log's writer thread snapshots them
+            # instead, which is safe exactly because nothing can mutate
+            # them.  Mutable payloads pay one eager ``pickle.dumps`` that
+            # doubles as the per-target defensive copy, so durable
+            # payloads must pickle even on the in-proc transport.
+            imm = type(data) in _IMMUTABLE
+            if imm and type(data) is not bytes:
+                # deferred snapshot; raw bytes payloads are excluded so a
+                # backend blob is unambiguously always pickle output
+                blob = data
+            else:
+                blob = pickle.dumps(data, pickle.HIGHEST_PROTOCOL)
+            copy_free = (ref or imm
+                         or (self.transport.serializes
+                             and all(t not in self._sched for t in targets)))
+            # a zombie task on a simulated-dead rank (kill_rank; the thread
+            # finishes its current task) must not log fires the transport
+            # will drop — they would leak as forever-pending records
+            nx, tag, ap, dead, idk = dur._hot
+            log_ok = not dead(src)
+            msgs = []
+            if idk:
+                # reference-delivery transport + in-process log: the Event
+                # object itself is the journal entry and its identity the
+                # idempotency key — no counter, no key tuple, no setattr
+                for t in targets:
+                    payload = data if copy_free else pickle.loads(blob)
+                    ev = Event(data=payload, source=src, eid=eid,
+                               persistent=persistent)
+                    if log_ok:
+                        ap((ev, t, blob))
+                    msgs.append(Message(EVENT, src, t, ev, owned=ref))
+            else:
+                for t in targets:
+                    payload = data if copy_free else pickle.loads(blob)
+                    ev = Event(data=payload, source=src, eid=eid,
+                               persistent=persistent)
+                    key = (src, t, eid, nx(), tag)
+                    ev._dkey = key
+                    if log_ok:
+                        # compact fired form; the log's writer expands it
+                        ap((key, blob))
+                    msgs.append(Message(EVENT, src, t, ev, owned=ref))
+        else:
+            # a serialising transport pickles every remote message
+            # synchronously inside send — that IS the fire-time snapshot,
+            # so the defensive deep-copy is only needed when some target is
+            # hosted by THIS process (self-sends and co-located ranks take
+            # the transport's loopback, which delivers the object by
+            # reference)
+            copy_free = ref or (self.transport.serializes
+                                and all(t not in self._sched
+                                        for t in targets))
+            payload = data if copy_free else copy_payload(data)
+            # ref=True hands payload ownership over (EDAT_ADDRESS): a
+            # deferred-write transport may then serialise it lazily and
+            # zero-copy
+            msgs = [Message(EVENT, src, t,
+                            Event(data=payload
+                                  if (copy_free or len(targets) == 1)
+                                  else copy_payload(payload),
+                                  source=src, eid=eid,
+                                  persistent=persistent),
+                            owned=ref)
+                    for t in targets]
         sch = self._sched[src]
         # sent is counted before the send so the termination detector can
         # never observe balanced counters with the message still in flight;
@@ -453,6 +650,14 @@ class Runtime:
 
     def _fire_batch(self, src: int, fires: Sequence[FireLike], *,
                     persistent: bool, ref: bool) -> None:
+        dur = self._durable
+        if dur is not None and any(dur.wants(f[1]) for f in fires):
+            # durable fires need a key per (event, target): take the
+            # per-fire path (batching is a wire optimisation, not semantics)
+            for f in fires:
+                self._fire(src, f[0], f[1], f[2] if len(f) > 2 else None,
+                           persistent=persistent, ref=ref)
+            return
         sch = self._sched[src]
         msgs: List[Message] = []
         agg: Optional[Dict[str, List[int]]] = {} if sch.metrics_on else None
@@ -676,6 +881,10 @@ class Runtime:
         for r in self._local_ranks:
             if r != rank and not self.transport.is_dead(r):
                 self._fire_sys(r, r, RANK_FAILED, rank)
+        if self._durable is not None:
+            # marks replay in-flight *before* the poke below, so the
+            # detector can't declare termination in the gap
+            self._durable.note_rank_failed(rank)
         self._poke(force=True)  # alive-set changed under the detector
 
     def _on_peer_dead(self, rank: int) -> None:
@@ -686,13 +895,15 @@ class Runtime:
         for r in self._local_ranks:
             if r != rank and not self.transport.is_dead(r):
                 self._fire_sys(r, r, RANK_FAILED, rank)
+        if self._durable is not None:
+            self._durable.note_rank_failed(rank)
         if (self._distributed and rank == self._det_rank
                 and self._det_rank not in self._sched):
             # the termination coordinator died: nobody will ever broadcast
             # terminate — fail this process instead of hanging to timeout
             with self._err_mu:
                 if self._error is None:
-                    self._error = EdatTaskError(
+                    self._error = RankDiedError(
                         f"rank {rank} (termination coordinator) failed")
             self._term_event.set()
         self._poke(force=True)
@@ -764,7 +975,10 @@ class Runtime:
                                        + snap.get("trace_dropped", 0))
         tmetrics = getattr(self.transport, "metrics", None)
         transport = tmetrics() if callable(tmetrics) else {"kind": "inproc"}
-        return {"channels": channels, "ranks": ranks, "transport": transport}
+        out = {"channels": channels, "ranks": ranks, "transport": transport}
+        if self._durable is not None:
+            out["durable"] = self._durable.snapshot()
+        return out
 
     # ------------------------------------------------------------------ run
     def run(self, main: Callable[[Context], None],
@@ -843,6 +1057,9 @@ class Runtime:
             for s in self._sched.values():
                 s.join()
             self.transport.close()
+            if self._durable is not None:
+                # land every queued log record (sqlite readers outlive us)
+                self._durable.close()
         if self._error is not None:
             raise self._error
         return self.stats
@@ -925,6 +1142,11 @@ class Runtime:
             rcv += sch.received
         if self._pending_timers:
             return False
+        dur = self._durable
+        if dur is not None and dur.busy():
+            # a durable replay is in flight: re-fires are imminent, so the
+            # counters' balance (or imbalance) right now is meaningless
+            return False
         if self._distributed:
             # only local state is readable: locally quiet is the best this
             # gate can certify — the formal CONTROL poll decides globally
@@ -991,7 +1213,10 @@ class Runtime:
                         s += self._sched[r].sent
                         rcv += self._sched[r].received
                 rcv += self.transport.dropped
-            all_idle = all(x["idle"] for x in sts) and mailbox == 0 and timers == 0
+            all_idle = (all(x["idle"] for x in sts)
+                        and mailbox == 0 and timers == 0
+                        and not (self._durable is not None
+                                 and self._durable.busy()))
             if not all_idle or s != rcv:
                 prev = None
                 if self._distributed:

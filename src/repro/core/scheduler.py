@@ -285,6 +285,12 @@ class Scheduler:
         self._trace: List[tuple] = []
         self._trace_dropped = 0
 
+        #: durable-mode consume hook (repro.durable): called OUTSIDE the
+        #: scheduler lock with the just-consumed events, on every path that
+        #: retires them — task completion (_run), wait() returns, and
+        #: retrieve_any.  None when durable mode is off (zero hot-path cost).
+        self.on_consumed: Optional[Callable[[List[Event]], None]] = None
+
     # ------------------------------------------------------------------ util
     def _spawn_worker(self):
         t = threading.Thread(target=self._worker_loop, daemon=True,
@@ -607,6 +613,9 @@ class Scheduler:
         for ev in refires:
             self.runtime._send_refire(self.rank, ev)
         if evs is not None:
+            oc = self.on_consumed
+            if oc is not None:
+                oc(evs)
             return evs
         held = self._release_all_locks()
         with cv:
@@ -625,7 +634,11 @@ class Scheduler:
         self._reacquire_locks(held)
         if self._shutdown and not w.frame.complete:
             raise RuntimeError("EDAT shut down while task was waiting")
-        return w.frame.events()
+        evs = w.frame.events()
+        oc = self.on_consumed
+        if oc is not None:
+            oc(evs)
+        return evs
 
     def retrieve_any(self, deps: List[Dep]) -> List[Event]:
         """Paper §IV.B ``edatRetrieveAny``: non-blocking subset retrieval."""
@@ -644,6 +657,10 @@ class Scheduler:
                 self._count_consumed_locked(got)
         for ev in refires:
             self.runtime._send_refire(self.rank, ev)
+        if got:
+            oc = self.on_consumed
+            if oc is not None:
+                oc(got)
         return got
 
     # ----------------------------------------------------------------- locks
@@ -783,6 +800,11 @@ class Scheduler:
                          len(inst.events)))
                 self._cv.notify_all()
                 idle = self._idle_locked()
+            oc = self.on_consumed
+            if oc is not None and inst.events:
+                # completion record even if the task raised: the event WAS
+                # consumed; the error aborts the whole run regardless
+                oc(inst.events)
             if idle:
                 self.runtime._poke()
 

@@ -38,6 +38,12 @@ Rules (each reports the triggering numbers in its message):
   bound and clients were throttled.  Reported against the ``request``
   channel (the producer side that outran admission).  Suggests more
   decode slots, a lower offered rate, or a larger queue bound.
+* **tasks-replayed** — the durable recovery coordinator re-fired a dead
+  rank's unconsumed events (``Session(durable=True)``); one finding per
+  (dead rank, channel) naming the replayed-event count.  Informational:
+  the run *survived* a failure — verify results account for
+  at-least-once delivery, and consider an elastic replacement
+  (``Session.respawn``) if survivor load is a concern.
 
 Machine-generated channels (``__``-prefixed eids) are exempt from the
 per-channel rules.
@@ -134,6 +140,20 @@ def analyze(stats: Mapping[str, Any], *,
             {"eid": "request", "bp_fires": bp_fires,
              "request_fires": req.get("fires", 0),
              "queued_max": req.get("queued_max", 0)}))
+
+    for rep in (stats.get("durable") or {}).get("replays") or ():
+        eid = rep.get("channel")
+        n = rep.get("events", 0)
+        dead = rep.get("dead_rank")
+        findings.append(Finding(
+            "tasks-replayed",
+            f"channel {eid!r}: {n} event(s) fired at dead rank {dead} "
+            f"were replayed onto survivors by the durable recovery "
+            f"coordinator — the run survived the failure; verify results "
+            f"tolerate at-least-once delivery (dedup by an id in the "
+            f"payload), and consider an elastic replacement "
+            f"(Session.respawn) if survivor load is a concern",
+            {"eid": eid, "events": n, "dead_rank": dead}))
 
     waits = {r: rk.get("quorum_wait_s", 0.0) for r, rk in ranks.items()}
     total_wait = sum(waits.values())

@@ -10,11 +10,11 @@ Nothing above the :class:`~repro.core.transport.Transport` interface
 changes: the same ``main(ctx)`` runs threads-as-ranks in one process or
 SPMD across processes.
 """
-from .bootstrap import bootstrap, bootstrap_from_env
+from .bootstrap import bootstrap, bootstrap_from_env, bootstrap_join
 from .socket_transport import SocketTransport
 
 __all__ = ["SocketTransport", "bootstrap", "bootstrap_from_env",
-           "ProcessGroup", "launch_processes"]
+           "bootstrap_join", "ProcessGroup", "launch_processes"]
 
 
 def __getattr__(name):

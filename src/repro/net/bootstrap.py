@@ -42,6 +42,7 @@ import errno
 import os
 import pickle
 import socket
+import threading
 import time
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -99,6 +100,7 @@ def bootstrap(rank: int, n_ranks: int, coord_addr: Addr, *,
               local_ranks: Optional[Sequence[int]] = None,
               host: str = "127.0.0.1", timeout: float = 30.0,
               hb_interval: float = 0.5, hb_timeout: float = 5.0,
+              elastic: bool = False,
               **transport_kw) -> SocketTransport:
     """Run the process-level rendezvous and return a connected transport.
 
@@ -106,7 +108,13 @@ def bootstrap(rank: int, n_ranks: int, coord_addr: Addr, *,
     the process hosts (default: just ``rank`` — the classic one-rank-per-
     process world).  Extra keyword arguments (``coalesce``,
     ``flush_interval``, ``max_batch_bytes``) pass through to
-    :class:`SocketTransport`."""
+    :class:`SocketTransport`.
+
+    With ``elastic=True`` the rank-0 process keeps the coordinator
+    listener open after rendezvous and serves :func:`bootstrap_join`
+    requests from replacement processes for the life of the run: a late
+    process may re-host a dead process's ranks, and every survivor is
+    told to dial it (``PEER_JOINED``) and splices it into the mesh."""
     ranks = tuple(sorted(set(local_ranks))) if local_ranks else (rank,)
     assert rank == ranks[0], \
         f"bootstrap rank {rank} must be the lead of local_ranks {ranks}"
@@ -120,6 +128,7 @@ def bootstrap(rank: int, n_ranks: int, coord_addr: Addr, *,
     my_addr: Addr = (host, listener.getsockname()[1])
 
     # -- placement exchange through the coordinator -------------------------
+    coord = None
     if rank == 0:
         coord = _listener_retry(coord_addr[0], coord_addr[1], deadline)
         coord.settimeout(timeout)
@@ -178,7 +187,9 @@ def bootstrap(rank: int, n_ranks: int, coord_addr: Addr, *,
         finally:
             for c in conns:
                 c.close()
-            coord.close()
+            if not elastic:      # elastic: the join server inherits it
+                coord.close()
+                coord = None
     else:
         # register-with-retry: until the real coordinator owns the port a
         # dial may reach a squatter (the same TOCTOU the coordinator's
@@ -234,9 +245,173 @@ def bootstrap(rank: int, n_ranks: int, coord_addr: Addr, *,
             peers[frame[1]] = _configure(s)
     finally:
         listener.close()
+    transport = SocketTransport(rank, n_ranks, peers, local_ranks=ranks,
+                                placement=placement,
+                                hb_interval=hb_interval,
+                                hb_timeout=hb_timeout, **transport_kw)
+    if coord is not None:
+        t = threading.Thread(target=_join_server,
+                             args=(coord, transport, timeout),
+                             daemon=True, name="edat-net-join-server")
+        transport._join_thread = t
+        t.start()
+    return transport
+
+
+def _join_server(coord: socket.socket, transport: SocketTransport,
+                 timeout: float) -> None:
+    """Rank-0 elastic-join service: accept ``JOIN`` requests on the (kept
+    alive) coordinator listener for the life of the transport.
+
+    A JOIN is granted only for a placement entry whose ranks are ALL
+    currently dead (the replacement re-hosts exactly that process's
+    ranks); anything else gets ``NOJOIN`` and the newcomer retries — in
+    particular a replacement that races the failure detector simply waits
+    out the heartbeat timeout.  On grant: reply ``WELCOME`` with the
+    placement and the set of live processes that will dial in, broadcast
+    ``PEER_JOINED`` to the survivors, and dial the newcomer ourselves."""
+    coord.settimeout(0.5)
+    io_timeout = min(timeout, 5.0)
+    try:
+        while not transport._close_started:
+            try:
+                c, _ = coord.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return
+            c.settimeout(io_timeout)
+            try:
+                frame = frames.recv_frame(c)
+            except (OSError, ValueError, pickle.UnpicklingError, EOFError):
+                frame = None
+            if (not isinstance(frame, tuple) or len(frame) != 4
+                    or frame[0] != frames.JOIN):
+                c.close()        # stray dial on the well-known port
+                continue
+            _, lead, jranks, addr = frame
+            try:
+                lead = int(lead)
+                jranks = tuple(sorted(int(r) for r in jranks))
+                addr = (str(addr[0]), int(addr[1]))
+            except (TypeError, ValueError, IndexError):
+                c.close()
+                continue
+            if (transport.placement.get(lead) != jranks
+                    or not all(transport.is_dead(r) for r in jranks)):
+                try:
+                    frames.send_frame(c, (frames.NOJOIN,
+                                          f"ranks {jranks} are not a dead "
+                                          f"process of this world"))
+                except OSError:
+                    pass
+                c.close()
+                continue
+            dialers = [l for l, rs in transport.placement.items()
+                       if l != lead
+                       and not all(transport.is_dead(r) for r in rs)]
+            dead = [l for l, rs in transport.placement.items()
+                    if l != lead
+                    and all(transport.is_dead(r) for r in rs)]
+            try:
+                frames.send_frame(c, (frames.WELCOME, {
+                    "placement": dict(transport.placement),
+                    "dead": dead, "dialers": dialers}))
+            except OSError:
+                c.close()
+                continue
+            c.close()
+            # survivors dial the newcomer concurrently with our own dial
+            transport.announce_join(lead, addr)
+            transport.dial_peer(lead, addr, timeout=timeout)
+    finally:
+        try:
+            coord.close()
+        except OSError:
+            pass
+
+
+def bootstrap_join(rank: int, n_ranks: int, coord_addr: Addr, *,
+                   local_ranks: Optional[Sequence[int]] = None,
+                   host: str = "127.0.0.1", timeout: float = 30.0,
+                   hb_interval: float = 0.5, hb_timeout: float = 5.0,
+                   **transport_kw) -> SocketTransport:
+    """Elastically join a *running* world as a replacement process.
+
+    The counterpart of :func:`bootstrap` for a process launched after the
+    original rendezvous: it re-hosts the ranks of a process that died
+    (``local_ranks`` must exactly match a placement entry).  Protocol:
+    listen first (so the advertised address is always accepting), send
+    ``JOIN`` to the still-open coordinator, retry while it answers
+    ``NOJOIN`` (the failure detector may not have declared the dead
+    process yet), then accept one HELLO dial from every live process and
+    hand the assembled mesh to :class:`SocketTransport` — with any other
+    still-dead processes pre-marked via ``dead_procs``."""
+    ranks = tuple(sorted(set(local_ranks))) if local_ranks else (rank,)
+    assert rank == ranks[0], \
+        f"bootstrap_join rank {rank} must be the lead of {ranks}"
+    deadline = time.monotonic() + timeout
+    listener = _listener(host)
+    my_addr: Addr = (host, listener.getsockname()[1])
+    info = None
+    try:
+        while info is None:
+            if time.monotonic() >= deadline:
+                raise RuntimeError(
+                    f"bootstrap_join: no WELCOME from {coord_addr} for "
+                    f"ranks {ranks} within {timeout}s")
+            c = _dial(coord_addr, deadline)
+            c.settimeout(max(0.1, min(timeout,
+                                      deadline - time.monotonic())))
+            try:
+                frames.send_frame(c, (frames.JOIN, rank, ranks, my_addr))
+                got = frames.recv_frame(c)
+                if (isinstance(got, tuple) and len(got) == 2
+                        and got[0] == frames.WELCOME
+                        and isinstance(got[1], dict)):
+                    info = got[1]
+                # NOJOIN / garbage / EOF: not joinable yet, retry below
+            except (OSError, TypeError, KeyError, IndexError, ValueError,
+                    pickle.UnpicklingError, EOFError):
+                info = None
+            finally:
+                c.close()
+            if info is None:
+                time.sleep(0.2)
+        placement = {int(l): tuple(int(r) for r in rs)
+                     for l, rs in info["placement"].items()}
+        dialers = {int(l) for l in info["dialers"]}
+        dead = {int(l) for l in info["dead"]}
+        assert placement.get(rank) == ranks, \
+            f"WELCOME placement {placement} does not host {ranks} at {rank}"
+        peers: Dict[int, socket.socket] = {}
+        listener.settimeout(1.0)
+        while set(peers) != dialers:
+            if time.monotonic() >= deadline:
+                missing = sorted(dialers - set(peers))
+                raise RuntimeError(
+                    f"bootstrap_join: processes {missing} never dialed in")
+            try:
+                s, _ = listener.accept()
+            except socket.timeout:
+                continue
+            s.settimeout(timeout)
+            try:
+                frame = frames.recv_frame(s)
+            except (OSError, ValueError, pickle.UnpicklingError, EOFError):
+                frame = None
+            if (not isinstance(frame, tuple) or len(frame) != 2
+                    or frame[0] != frames.HELLO or frame[1] not in dialers
+                    or frame[1] in peers):
+                s.close()        # stray connection, not an expected dialer
+                continue
+            peers[int(frame[1])] = _configure(s)
+    finally:
+        listener.close()
     return SocketTransport(rank, n_ranks, peers, local_ranks=ranks,
-                           placement=placement, hb_interval=hb_interval,
-                           hb_timeout=hb_timeout, **transport_kw)
+                           placement=placement, dead_procs=sorted(dead),
+                           hb_interval=hb_interval, hb_timeout=hb_timeout,
+                           **transport_kw)
 
 
 def bootstrap_from_env(**kw) -> SocketTransport:

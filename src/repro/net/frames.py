@@ -62,6 +62,12 @@ HELLO = "hello"
 HEARTBEAT = "hb"
 BYE = "bye"
 
+# elastic join (late processes re-hosting a dead process's ranks):
+JOIN = "join"                  # ("join", lead, ranks, addr) -> coordinator
+WELCOME = "welcome"            # ("welcome", {...}) coordinator's acceptance
+NOJOIN = "nojoin"              # ("nojoin", reason): refused, retry later
+PEER_JOINED = "peer_joined"    # ("peer_joined", lead, addr): dial newcomer
+
 
 def encode(obj: Any) -> bytes:
     """Serialise ``obj`` into one length-prefixed plain frame."""

@@ -99,7 +99,8 @@ def _resolve_spec(spec: str) -> Callable:
 def _child_entry(ranks: Tuple[int, ...], n_ranks: int, coord_addr,
                  main: MainSpec, runtime_kwargs: Dict[str, Any],
                  run_timeout: float, net: Dict[str, Any], result_q,
-                 launch_id: str = "") -> None:
+                 launch_id: str = "", join: bool = False,
+                 ready_file: Optional[str] = None) -> None:
     os.environ["EDAT_RANK"] = str(ranks[0])
     os.environ["EDAT_LOCAL_RANKS"] = ",".join(str(r) for r in ranks)
     os.environ["EDAT_NRANKS"] = str(n_ranks)
@@ -109,13 +110,30 @@ def _child_entry(ranks: Tuple[int, ...], n_ranks: int, coord_addr,
         # scratch space to THIS launch (a reused coordinator port must
         # not resurrect a previous run's on-disk state)
         os.environ["EDAT_LAUNCH_ID"] = launch_id
+    if join:
+        # lets user code distinguish an elastic replacement from the
+        # original incarnation of its ranks (e.g. chaos programs that
+        # stall their first incarnation must not stall the second)
+        os.environ["EDAT_JOINED"] = "1"
     try:
         from repro.core.runtime import Runtime
-        from .bootstrap import bootstrap
+        from .bootstrap import bootstrap, bootstrap_join
         if isinstance(main, str):
             main = _resolve_spec(main)
-        transport = bootstrap(ranks[0], n_ranks, coord_addr,
-                              local_ranks=ranks, **net)
+        if join:
+            # replacement process: HELLO into the *running* coordinator
+            # and re-host this placement entry's (dead) ranks
+            jnet = {k: v for k, v in net.items() if k != "elastic"}
+            transport = bootstrap_join(ranks[0], n_ranks, coord_addr,
+                                       local_ranks=ranks, **jnet)
+        else:
+            transport = bootstrap(ranks[0], n_ranks, coord_addr,
+                                  local_ranks=ranks, **net)
+        if ready_file:
+            # the mesh splice is complete: tell the observer (chaos tests
+            # key "the replacement is in" off this file's existence)
+            with open(ready_file, "w"):
+                pass
         rt = Runtime(n_ranks, transport=transport, **runtime_kwargs)
         t0 = time.monotonic()
         stats = rt._run_internal(main, timeout=run_timeout)
@@ -144,6 +162,16 @@ def _child_entry(ranks: Tuple[int, ...], n_ranks: int, coord_addr,
             stats["run_seconds"] = run_seconds
             result_q.put(("ok", stats))
     except BaseException as e:  # noqa: BLE001 - report, then non-zero exit
+        if type(e).__name__ == "RankDiedError":
+            # the termination coordinator (rank 0's process) died under
+            # this rank: an *expected* casualty of fault injection, not a
+            # bug in this child — report distinctly and exit cleanly so
+            # chaos tests can assert "no survivor crashed"
+            try:
+                result_q.put(("rankdied", ranks[0], str(e)))
+            except Exception:
+                pass
+            raise SystemExit(0)
         try:
             result_q.put(("err", ranks[0], f"{type(e).__name__}: {e}"))
         except Exception:
@@ -161,7 +189,7 @@ class ProcessGroup:
     #: ProcessGroup kwargs forwarded to the SocketTransport (via bootstrap)
     #: rather than to the Runtime
     NET_KEYS = ("hb_interval", "hb_timeout", "coalesce", "flush_interval",
-                "max_batch_bytes")
+                "max_batch_bytes", "elastic")
 
     def __init__(self, n_ranks: int, main: MainSpec, *,
                  n_procs: Optional[int] = None,
@@ -190,6 +218,10 @@ class ProcessGroup:
         self._procs: Dict[int, mp.process.BaseProcess] = {}
         self._killed = set()        # ranks whose process we SIGKILLed
         self._q = None
+        self._coord: Optional[Tuple[str, int]] = None
+        self._launch_id = ""
+        #: every (kind, ...) report the children queued, populated by wait()
+        self.child_reports: List[tuple] = []
 
     def _proc_of(self, rank: int) -> Tuple[int, Tuple[int, ...]]:
         for rs in self.placement:
@@ -201,14 +233,14 @@ class ProcessGroup:
         import uuid
         ctx = mp.get_context("spawn")
         self._q = ctx.SimpleQueue()
-        coord = (self._host, _free_port(self._host))
-        launch_id = uuid.uuid4().hex[:12]
+        self._coord = (self._host, _free_port(self._host))
+        self._launch_id = uuid.uuid4().hex[:12]
         for rs in self.placement:
             p = ctx.Process(
                 target=_child_entry,
-                args=(rs, self.n_ranks, coord, self.main,
+                args=(rs, self.n_ranks, self._coord, self.main,
                       self.runtime_kwargs, self.run_timeout, self._net,
-                      self._q, launch_id),
+                      self._q, self._launch_id),
                 daemon=False,
                 name="edat-ranks" + "_".join(str(r) for r in rs))
             p.start()
@@ -223,6 +255,44 @@ class ProcessGroup:
         lead, rs = self._proc_of(rank)
         self._killed.update(rs)
         self._procs[lead].kill()
+
+    def respawn(self, rank: int,
+                ready_file: Optional[str] = None) -> None:
+        """Launch a replacement process for the (dead) process hosting
+        ``rank``: the elastic-join counterpart of :meth:`kill`.  The child
+        runs the same ``main`` but rendezvouses through
+        :func:`~repro.net.bootstrap.bootstrap_join` against the *running*
+        coordinator — requires the group to have been started with
+        ``elastic=True``.  ``ready_file`` (if given) is created by the
+        child the moment its mesh splice completes, so a chaos test can
+        key "the replacement is in" without polling the coordinator.  The
+        replacement is expected to exit cleanly: its ranks are removed
+        from the killed set."""
+        if not self._net.get("elastic"):
+            raise RuntimeError(
+                "respawn() requires ProcessGroup(..., elastic=True): "
+                "without it the coordinator listener is closed after "
+                "bootstrap and a replacement has nothing to JOIN")
+        lead, rs = self._proc_of(rank)
+        old = self._procs.get(lead)
+        if old is not None and old.is_alive():
+            # a just-delivered SIGKILL needs a moment to reap
+            old.join(5.0)
+        if old is not None and old.is_alive():
+            raise RuntimeError(
+                f"process hosting rank {rank} is still alive; respawn is "
+                f"for replacing a dead process")
+        ctx = mp.get_context("spawn")
+        p = ctx.Process(
+            target=_child_entry,
+            args=(rs, self.n_ranks, self._coord, self.main,
+                  self.runtime_kwargs, self.run_timeout, self._net,
+                  self._q, self._launch_id, True, ready_file),
+            daemon=False,
+            name="edat-rejoin" + "_".join(str(r) for r in rs))
+        p.start()
+        self._procs[lead] = p
+        self._killed -= set(rs)
 
     def join_all(self, timeout: Optional[float] = None) -> bool:
         """Soft join: wait for every process to exit *without* killing
@@ -255,6 +325,7 @@ class ProcessGroup:
         results = []
         while not self._q.empty():
             results.append(self._q.get())
+        self.child_reports = results
         stats = next((x[1] for x in results if x[0] == "ok"), None)
         if check:
             if hung:

@@ -113,7 +113,8 @@ class SocketTransport(Transport):
                  placement: Optional[Dict[int, Sequence[int]]] = None,
                  hb_interval: float = 0.5, hb_timeout: float = 5.0,
                  coalesce: bool = True, flush_interval: float = 0.0,
-                 max_batch_bytes: int = 1 << 20):
+                 max_batch_bytes: int = 1 << 20,
+                 dead_procs: Optional[Sequence[int]] = None):
         local = tuple(sorted(set(local_ranks))) if local_ranks else (rank,)
         assert rank in local, f"rank {rank} not in local_ranks {local}"
         if placement is None:
@@ -135,11 +136,17 @@ class SocketTransport(Transport):
         self._proc_of = {r: l for l, rs in self.placement.items()
                          for r in rs}
         remote = set(self.placement) - {self.rank}
-        assert set(peers) == remote, \
+        # a transport built by an elastically-joining process starts with
+        # some peer processes already dead (no socket to hand over); their
+        # per-peer state exists so a later add_peer can splice them in
+        dead_set = {int(p) for p in (dead_procs or ())}
+        assert dead_set <= remote, \
+            f"dead_procs {sorted(dead_set)} not all remote {sorted(remote)}"
+        assert set(peers) == remote - dead_set, \
             (f"process {self.rank}{local}: need one socket per peer "
-             f"process {sorted(remote)}, got {sorted(peers)}")
+             f"process {sorted(remote - dead_set)}, got {sorted(peers)}")
         self._peers = peers
-        self._send_mu = {p: threading.Lock() for p in peers}
+        self._send_mu = {p: threading.Lock() for p in remote}
         #: per-local-rank inboxes (pull mode) and their condition variables
         self._inbox: Dict[int, deque] = {r: deque() for r in local}
         self._cv = {r: threading.Condition() for r in local}
@@ -149,6 +156,10 @@ class SocketTransport(Transport):
         #: declared dead by the heartbeat/EOF detector — once per rank the
         #: failed process hosted; set by the Runtime
         self.on_peer_dead: Optional[Callable[[int], None]] = None
+        #: callback(rank) invoked (outside locks) when a replacement
+        #: process re-hosting a dead peer's ranks is spliced in via
+        #: :meth:`add_peer` — once per revived rank; set by the Runtime
+        self.on_peer_join: Optional[Callable[[int], None]] = None
         #: push-mode delivery: when the runtime registers this callback the
         #: reader threads hand message batches straight to it, skipping the
         #: inbox and the progress-thread wakeup hop (one fewer context
@@ -159,7 +170,10 @@ class SocketTransport(Transport):
 
         self._mu = threading.Lock()
         self._dead = [False] * n_ranks
-        self._sock_dead = {p: False for p in peers}  # per peer process
+        for p in dead_set:
+            for r in self.placement[p]:
+                self._dead[r] = True
+        self._sock_dead = {p: p in dead_set for p in remote}  # per process
         self._bye = set()          # peer processes that closed cleanly
         self._dropped = 0
         self._sent_to = [0] * n_ranks     # user events enqueued per dst
@@ -168,35 +182,42 @@ class SocketTransport(Transport):
         #: appears here — the placement tests assert exactly that
         self._wire_sent_to = [0] * n_ranks
         self._wire_recv_from = [0] * n_ranks
-        self._last_seen = {p: time.monotonic() for p in peers}
+        self._last_seen = {p: time.monotonic() for p in remote}
         self._closing = False
         self._close_started = False
+        self._splicing = set()     # peer procs with an add_peer in flight
 
         # writer-side coalescing state (one queue + writer thread per peer
         # process — co-located destinations share batch frames)
         self.coalesce = bool(coalesce)
         self.flush_interval = flush_interval
         self.max_batch_bytes = int(max_batch_bytes)
-        self._sendq: Dict[int, deque] = {p: deque() for p in peers}
-        self._sendcv = {p: threading.Condition() for p in peers}
-        self._wbusy = {p: False for p in peers}  # writer mid-write
+        self._sendq: Dict[int, deque] = {p: deque() for p in remote}
+        self._sendcv = {p: threading.Condition() for p in remote}
+        self._wbusy = {p: False for p in remote}  # writer mid-write
         #: set (under the peer's send condvar) when the peer's queue was
         #: dropped on death: an enqueue that raced the verdict counts its
         #: events dropped instead of queueing them forever-unwritten
-        self._q_dead = {p: False for p in peers}
+        self._q_dead = {p: p in dead_set for p in remote}
         # per-peer wire-level observability (bytes handed to the kernel,
         # write batches, send-queue high-water mark)
-        self._m_wire_bytes = {p: 0 for p in peers}
-        self._m_writes = {p: 0 for p in peers}
-        self._m_sendq_max = {p: 0 for p in peers}
+        self._m_wire_bytes = {p: 0 for p in remote}
+        self._m_writes = {p: 0 for p in remote}
+        self._m_sendq_max = {p: 0 for p in remote}
 
         self._hb_interval = hb_interval
         self._hb_timeout = hb_timeout
         self._threads: List[threading.Thread] = []
+        #: live reader/writer threads per peer process — add_peer joins a
+        #: dead peer's old threads before spawning replacements, so one
+        #: connection never has two writers interleaving frame pieces
+        self._peer_threads: Dict[int, List[threading.Thread]] = \
+            {p: [] for p in remote}
         for p in peers:
             t = threading.Thread(target=self._reader, args=(p,), daemon=True,
                                  name=f"edat-net-r{self.rank}<{p}")
             self._threads.append(t)
+            self._peer_threads[p].append(t)
             t.start()
         if self.coalesce:
             for p in peers:
@@ -204,9 +225,10 @@ class SocketTransport(Transport):
                                      daemon=True,
                                      name=f"edat-net-w{self.rank}>{p}")
                 self._threads.append(t)
+                self._peer_threads[p].append(t)
                 t.start()
         self._hb_stop = threading.Event()
-        if hb_interval > 0 and peers:
+        if hb_interval > 0 and remote:
             t = threading.Thread(target=self._heartbeat_loop, daemon=True,
                                  name=f"edat-net-hb{self.rank}")
             self._threads.append(t)
@@ -292,6 +314,16 @@ class SocketTransport(Transport):
                     with self._mu:
                         self._bye.add(peer)
                     # keep reading until EOF so late frames cannot be lost
+                elif kind == frames.PEER_JOINED:
+                    # the coordinator announced an elastic rejoin: dial the
+                    # replacement off-thread (the dial blocks) and splice
+                    # it in via add_peer when the HELLO lands
+                    _, j_lead, j_addr = frame
+                    threading.Thread(
+                        target=self.dial_peer,
+                        args=(int(j_lead), (str(j_addr[0]), int(j_addr[1]))),
+                        daemon=True,
+                        name=f"edat-net-join{self.rank}>{j_lead}").start()
                 # HEARTBEAT: nothing beyond the last_seen update above
             if msgs:
                 self._deliver_local(msgs, from_wire=True)
@@ -864,6 +896,113 @@ class SocketTransport(Transport):
             self._teardown(self._peers[proc])  # plain close() would leave
             # the reader's fd alive and keep delivering dead-rank events
             self._drop_queue(proc)
+
+    # --------------------------------------------------------- elastic join
+    def add_peer(self, lead: int, sock: socket.socket) -> bool:
+        """Splice a replacement process's connection into the live mesh.
+
+        ``lead`` must be the lead rank of a placement entry whose ranks
+        are ALL currently dead (the replacement re-hosts exactly the dead
+        process's ranks, so the placement never changes shape).  Sequence
+        matters: the dead peer's old reader/writer threads are joined
+        first (two writers on one socket would interleave frame pieces),
+        queue state is reset before the new writer starts (it checks the
+        dead flags), counters for the re-hosted ranks are zeroed (the new
+        incarnation starts from zero, and the termination balance must be
+        computed against *its* traffic), and only then are the ranks
+        marked alive — a send observing ``_dead[r] == False`` must find a
+        working queue behind it.  Returns False (closing ``sock``) when
+        the splice is not applicable."""
+        ranks = self.placement.get(lead)
+        with self._mu:
+            ok = (ranks is not None and lead != self.rank
+                  and not self._closing and lead not in self._splicing
+                  and self._sock_dead.get(lead, False)
+                  and all(self._dead[r] for r in ranks))
+            if ok:
+                self._splicing.add(lead)   # claim: one splice at a time
+        if not ok:
+            self._teardown(sock)
+            return False
+        try:
+            for t in self._peer_threads[lead]:
+                t.join(5.0)
+                if t.is_alive():           # wedged old thread: abort
+                    self._teardown(sock)
+                    return False
+            self._peer_threads[lead] = []
+            with self._sendcv[lead]:
+                self._sendq[lead].clear()
+                self._q_dead[lead] = False
+                self._wbusy[lead] = False
+            with self._mu:
+                self._peers[lead] = sock
+                self._sock_dead[lead] = False
+                self._bye.discard(lead)
+                self._last_seen[lead] = time.monotonic()
+                for r in ranks:
+                    self._sent_to[r] = 0
+                    self._recv_from[r] = 0
+                    self._wire_sent_to[r] = 0
+                    self._wire_recv_from[r] = 0
+            news = [threading.Thread(target=self._reader, args=(lead,),
+                                     daemon=True,
+                                     name=f"edat-net-r{self.rank}<{lead}")]
+            if self.coalesce:
+                news.append(threading.Thread(
+                    target=self._writer, args=(lead,), daemon=True,
+                    name=f"edat-net-w{self.rank}>{lead}"))
+            self._peer_threads[lead] = news
+            self._threads.extend(news)
+            for t in news:
+                t.start()
+            with self._mu:
+                for r in ranks:
+                    self._dead[r] = False
+        finally:
+            with self._mu:
+                self._splicing.discard(lead)
+        cb = self.on_peer_join
+        if cb is not None:
+            for r in ranks:
+                cb(r)
+        for r in self.local_ranks:
+            self.wake(r)   # blocked receivers should re-check the world
+        return True
+
+    def dial_peer(self, lead: int, addr: Tuple[str, int],
+                  timeout: float = 10.0) -> bool:
+        """Dial a just-announced replacement process, identify ourselves
+        with a HELLO, and splice the connection in via :meth:`add_peer`."""
+        try:
+            s = socket.create_connection(addr, timeout=timeout)
+            frames.send_frame(s, (frames.HELLO, self.rank))
+            s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            s.settimeout(None)
+        except OSError:
+            return False
+        return self.add_peer(lead, s)
+
+    def announce_join(self, lead: int, addr: Tuple[str, int]) -> None:
+        """Broadcast ``PEER_JOINED`` to every live peer process: each one
+        dials the newcomer at ``addr`` and splices it in (the coordinator
+        calls this after accepting an elastic JOIN)."""
+        frame = frames.encode((frames.PEER_JOINED, lead, tuple(addr)))
+        for p in list(self._peers):
+            if p == lead:
+                continue
+            with self._mu:
+                if (self._sock_dead.get(p, True) or p in self._bye
+                        or self._closing):
+                    continue
+            if self.coalesce:
+                self._enqueue(p, [("enc", [frame], 0)])
+                continue
+            try:
+                with self._send_mu[p]:
+                    self._peers[p].sendall(frame)
+            except OSError:
+                self._declare_proc_dead(p)
 
     @property
     def dropped(self) -> int:

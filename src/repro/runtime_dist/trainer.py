@@ -42,7 +42,11 @@ the paper's model:
                 death triggers exactly one coordinated recovery), then the
                 leader broadcasts ``recover``: survivors roll back to the
                 last durable checkpoint, re-shard the data stream
-                (elastic), and continue.
+                (elastic), and continue.  Under a durable-mode runtime
+                (``Session(durable=True)``, :mod:`repro.durable`) that
+                broadcast instead comes from the replay coordinator's
+                callback, after the dead rank's logged events are
+                re-homed — same rollback, coordinated ordering.
 
 The trainer is deliberately pure data-parallel at the EDAT level; inside a
 rank the step is a jitted JAX function (which on a real pod is itself
@@ -250,6 +254,9 @@ class EventDrivenTrainer:
         self.on_final: Optional[Callable[[Dict[str, Any]], None]] = None
         #: called (on rank 0's process) after each metric is recorded
         self.on_metric: Optional[Callable[[Dict[str, Any]], None]] = None
+        #: True once the durable replay coordinator owns the recovery
+        #: trigger (runtime in durable mode; see _arm_durable_recovery)
+        self._durable_recovery = False
 
         # jitted per-host functions (shared across co-located rank threads)
         def loss_fn(p, batch):
@@ -342,6 +349,8 @@ class EventDrivenTrainer:
         self._ensure_world(ctx.n_ranks)
         cfg = self.cfg
         self.runtime = ctx._rt
+        if ctx.rank == 0:
+            self._arm_durable_recovery()
         st = self.states[ctx.rank]
         self._init_state(st)
 
@@ -595,8 +604,48 @@ class EventDrivenTrainer:
             lead = st.alive and ctx.rank == min(st.alive)
         # leader triggers a coordinated rollback to the last durable ckpt
         if lead and self.cfg.ckpt_dir:
+            if self._durable_recovery and not self.runtime.is_dead(0):
+                # durable mode with the replay coordinator alive: the
+                # rollback broadcast comes from the replay callback,
+                # *after* the dead rank's events are re-homed (and after
+                # an elastic replacement had its join window)
+                return
             step = ckpt_store.latest_step(self.cfg.ckpt_dir) or 0
             ctx.fire(edat.ALL, "recover", {"step": step})
+
+    # ------------------------------------------------- durable-mode recovery
+    def _arm_durable_recovery(self) -> None:
+        """Runtime in durable mode (``Session(durable=True)``): hand the
+        recovery *trigger* to the replay coordinator.  The coordinator
+        already diffs the task log on RANK_FAILED and re-homes the dead
+        rank's unconsumed events; this callback then broadcasts the
+        coordinated ``recover`` rollback exactly once, *after* replay —
+        replacing the bespoke leader fire in :meth:`_on_rank_failed`
+        (which stays armed as the fallback for the one failure replay
+        cannot coordinate: the death of rank 0's own process).  While
+        rank 0 is alive it is always ``min(st.alive)``, so no other
+        leader races the callback.
+
+        The trainer's own channels stay epoch-scoped rather than durable:
+        a replayed gradient from before the rollback is discarded by the
+        collector's epoch check anyway, so journaling them would buy
+        nothing.  What durable mode contributes here is ordering (replay
+        settles, an elastic replacement gets its join window, then one
+        rollback) — the fair-weather path is byte-identical."""
+        rt = self.runtime
+        dur = getattr(rt, "_durable", None)
+        if dur is None:
+            return
+        self._durable_recovery = True
+
+        def _recover_after_replay(dead: int, revived: bool, n: int) -> None:
+            if not self.cfg.ckpt_dir or rt.is_dead(0):
+                return      # no rollback anchor / coordinator rank itself
+            step = ckpt_store.latest_step(self.cfg.ckpt_dir) or 0
+            rt._fire(min(rt._sched), edat.ALL, "recover", {"step": step},
+                     persistent=False, ref=False)
+
+        dur.add_replay_callback(_recover_after_replay)
 
     def _on_recover(self, ctx: edat.Context, events):
         st = self.states[ctx.rank]

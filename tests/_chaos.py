@@ -22,7 +22,11 @@ distributed test files lives here:
   send FIN while another duplicated fd still holds the connection, so
   the peer's failure detector would never fire;
 * :func:`stall_spec` — the trainer's ``{rank: (step, seconds)}`` stall
-  injection, named so tests read as intent.
+  injection, named so tests read as intent;
+* :func:`launch_replacement` / :func:`wait_for_join` — the elastic-join
+  pattern: respawn the SIGKILLed process's ranks into the *running*
+  world and block until the mesh splice is complete (the replacement's
+  transport constructed, every survivor dialed back).
 """
 from __future__ import annotations
 
@@ -136,3 +140,25 @@ def stall_spec(rank: int, at_step: int,
     """Trainer stall injection: ``rank`` hangs ``seconds`` at
     ``at_step`` (its heartbeat pump goes silent too, like a real hang)."""
     return {rank: (at_step, seconds)}
+
+
+def launch_replacement(pg, rank: int, workdir: str) -> str:
+    """Elastic-join step 2 (after :func:`sigkill_when_ready` or
+    ``pg.kill``): launch a replacement process for the dead one that
+    hosted ``rank``.  Requires the group to have been started with
+    ``elastic=True``.  Returns the ready-file path the replacement will
+    touch once its mesh splice is complete — hand it to
+    :func:`wait_for_join` before asserting anything about the rejoined
+    world."""
+    ready = os.path.join(workdir, f"rejoined_{rank}")
+    pg.respawn(rank, ready_file=ready)
+    return ready
+
+
+def wait_for_join(ready_path: str, timeout: float = 60.0) -> None:
+    """Block until an elastic replacement finished splicing into the
+    running world: its transport is constructed, the coordinator re-armed
+    the rank's failure handling, and every survivor accepted its dial.
+    (The replayed backlog may still be draining — that is the durable
+    layer's job, asserted via the log, not the splice's.)"""
+    wait_for_file(ready_path, timeout)

@@ -1,0 +1,347 @@
+"""repro.durable: the task log, automated replay, and elastic join.
+
+Layered like the subsystem itself:
+
+* log backends (:class:`MemoryLog` / :class:`SqliteLog`) — idempotent
+  appends, the pending diff, replay-target override semantics;
+* :class:`BatchLogger` — the off-hot-path writer thread;
+* in-proc automated replay — ``Runtime(durable=True)`` +
+  ``kill_rank``: the dead rank's unconsumed events land on survivors
+  and the program converges to the uninterrupted result;
+* cross-process chaos — the :mod:`repro.durable.demo` work queue,
+  SIGKILLed mid-run, recovered both by survivor-only replay and by an
+  elastically-joined replacement process;
+* the ``tests/_chaos.py`` elastic-join helpers.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core.event import ANY, RANK_FAILED
+from repro.durable.log import (BatchLogger, COMPLETED, FIRED, MemoryLog,
+                               REPLAYED, SqliteLog, open_log)
+
+from tests._chaos import Saboteur, launch_replacement, wait_for_join
+
+pytestmark = pytest.mark.timeout(180)
+
+
+# ------------------------------------------------------------ log backends
+def _mk_log(kind, tmp_path):
+    if kind == "memory":
+        return MemoryLog()
+    return SqliteLog(str(tmp_path / "log.sqlite"))
+
+
+@pytest.fixture(params=["memory", "sqlite"])
+def log(request, tmp_path):
+    lg = _mk_log(request.param, tmp_path)
+    yield lg
+    lg.close()
+
+
+def test_log_append_idempotent(log):
+    rec = ("k1", FIRED, "ch", 0, 1, b"x")
+    log.append_many([rec])
+    log.append_many([rec])            # at-least-once logging double-appends
+    assert log.count(FIRED) == 1
+
+
+def test_log_pending_is_fired_minus_completed(log):
+    log.append_many([("k1", FIRED, "ch", 0, 1, b"a"),
+                     ("k2", FIRED, "ch", 0, 2, b"b"),
+                     ("k1", COMPLETED, "ch", 0, 1, None)])
+    pend = log.pending()
+    assert [r[0] for r in pend] == ["k2"]
+    assert pend[0][5] == b"b"
+    assert log.pending(rank=1) == []          # k1 completed, k2 is 0->2
+    assert [r[0] for r in log.pending(rank=2)] == ["k2"]
+    # the source rank also matches the filter (its death strands the fire)
+    assert [r[0] for r in log.pending(rank=0)] == ["k2"]
+
+
+def test_log_replayed_overrides_target_keeps_blob(log):
+    log.append_many([("k1", FIRED, "ch", 0, 2, b"payload")])
+    # the coordinator logs the re-fire with a None blob (the payload is
+    # already in the fired record) and the new destination
+    log.append_many([("k1", REPLAYED, "ch", 0, 3, None)])
+    pend = log.pending()
+    assert len(pend) == 1
+    key, kind, eid, src, dst, blob = pend[0]
+    assert (key, dst, blob) == ("k1", 3, b"payload")
+    # a second replay re-targets again: latest wins
+    log.append_many([("k1", REPLAYED, "ch", 0, 1, None)])
+    assert log.pending()[0][4] == 1
+    # completion (on the replayed target) clears it
+    log.append_many([("k1", COMPLETED, "ch", 0, 1, None)])
+    assert log.pending() == []
+
+
+def test_log_eid_targets(log):
+    log.append_many([("k1", FIRED, "a", 0, 1, None),
+                     ("k2", FIRED, "a", 0, 2, None),
+                     ("k3", FIRED, "b", 0, 3, None),
+                     ("k3", REPLAYED, "b", 0, 1, None)])
+    t = log.eid_targets()
+    assert t["a"] == {1, 2}
+    assert t["b"] == {1, 3}
+
+
+def test_sqlite_log_shared_across_connections(tmp_path):
+    path = str(tmp_path / "shared.sqlite")
+    a, b = SqliteLog(path), SqliteLog(path)
+    try:
+        a.append_many([("k1", FIRED, "ch", 0, 1, b"x")])
+        b.append_many([("k1", COMPLETED, "ch", 0, 1, None),
+                       ("k2", FIRED, "ch", 0, 1, b"y")])
+        assert a.count(FIRED) == 2
+        assert [r[0] for r in a.pending()] == ["k2"]
+    finally:
+        a.close()
+        b.close()
+
+
+def test_open_log_factory(tmp_path):
+    mem = open_log(None)
+    assert mem.kind == "memory"
+    sq = open_log(str(tmp_path / "f.sqlite"))
+    assert sq.kind == "sqlite"
+    sq.close()
+
+
+# ------------------------------------------------------------- BatchLogger
+def test_batch_logger_lands_everything():
+    lg = BatchLogger(MemoryLog())
+    n = 500
+    for i in range(n):
+        lg.append((f"k{i}", FIRED, "ch", 0, 1, None))
+    assert lg.flush(10.0)
+    assert lg.log.count(FIRED) == n
+    assert lg.appends == n
+    # the writer drains whole runs per backend call: far fewer batches
+    # than records (exact count is scheduling-dependent)
+    assert 1 <= lg.batches <= n
+    lg.close()
+
+
+def test_batch_logger_append_many_and_close():
+    lg = BatchLogger(MemoryLog())
+    lg.append_many([(f"k{i}", FIRED, "ch", 0, 1, None) for i in range(32)])
+    lg.close()                        # close implies flush
+    assert lg.log.count(FIRED) == 32
+
+
+def test_batch_logger_concurrent_appenders():
+    lg = BatchLogger(MemoryLog())
+    def pump(tag):
+        for i in range(200):
+            lg.append((f"{tag}/{i}", FIRED, "ch", 0, 1, None))
+    ts = [threading.Thread(target=pump, args=(t,)) for t in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert lg.flush(10.0)
+    assert lg.log.count(FIRED) == 800
+    lg.close()
+
+
+# ------------------------------------------------- in-proc automated replay
+class _Queue:
+    """Minimal durable work fan-out (the demo's WorkQueue, in-proc)."""
+
+    def __init__(self, items):
+        self.items = items
+        self.results = {}
+        self.mu = threading.Lock()
+
+    def __call__(self, ctx):
+        ctx.submit_persistent(lambda c, e: None,
+                              deps=[(ANY, RANK_FAILED)], name="sink")
+        if ctx.rank == 0:
+            ctx.submit_persistent(self._collect, deps=[(ANY, "done")],
+                                  name="collect")
+            for i in range(self.items):
+                ctx.fire(1 + i % (ctx.n_ranks - 1), "work",
+                         {"id": i, "x": i})
+        else:
+            ctx.submit_persistent(self._work, deps=[(ANY, "work")],
+                                  name="work")
+
+    def _work(self, ctx, events):
+        d = events[0].data
+        if ctx.rank == 2:             # dawdle: widens the kill window
+            time.sleep(0.15)
+        ctx.fire(0, "done", {"id": d["id"], "val": d["x"] * d["x"] + 1})
+
+    def _collect(self, ctx, events):
+        d = events[0].data
+        with self.mu:                 # at-least-once: dedup by item id
+            self.results.setdefault(d["id"], d["val"])
+
+
+def test_inproc_replay_on_kill_rank():
+    """kill_rank mid-run: the durable coordinator re-fires the dead
+    rank's unconsumed events onto survivors and the run converges to the
+    uninterrupted result with nothing pending in the log."""
+    from repro import edat
+    n = 24
+    prog = _Queue(n)
+    with edat.Session(4, workers_per_rank=1, unconsumed="ignore",
+                      durable=True, timeout=60.0) as s:
+        rt = s.runtime
+        dur = rt._durable
+        assert dur is not None and dur.log.kind == "memory"
+        # survivors complete within milliseconds while rank 2 dawdles
+        # 0.15s per item: the kill reliably lands with most of rank 2's
+        # queue unconsumed
+        sab = Saboteur(
+            lambda: rt.kill_rank(2),
+            pred=lambda: dur.log.count(COMPLETED) >= 2,
+            name="kill-rank-2").start()
+        s.run(prog)
+        sab.join()
+        assert prog.results == {i: i * i + 1 for i in range(n)}
+        dur.logger.flush()
+        assert dur.log.pending() == []
+        assert dur.log.count(REPLAYED) >= 1
+        # per-channel replay accounting names the channel and dead rank
+        assert any(r["dead_rank"] == 2 and r["channel"] in ("work", "done")
+                   for r in dur.replays)
+
+
+def test_inproc_durable_disabled_by_default():
+    """No durable kwarg: the runtime never builds DurableState and events
+    carry no idempotency key."""
+    from repro import edat
+    seen = {}
+    def main(ctx):
+        if ctx.rank == 0:
+            ctx.fire(1, "ping", 7)
+        else:
+            def t(c, evs):
+                seen["dkey"] = "_dkey" in evs[0].__dict__
+            ctx.submit(t, deps=[(0, "ping")])
+    with edat.Session(2, workers_per_rank=1, timeout=30.0) as s:
+        rt = s.runtime
+        s.run(main)
+        assert rt._durable is None
+    assert seen == {"dkey": False}
+
+
+def test_per_channel_durable_optin():
+    """Channel(..., durable=True) activates durable mode lazily for just
+    that channel: its fires are journaled, others are not."""
+    from repro import edat
+    dur_ch = edat.Channel("optin.work", durable=True)
+    plain = edat.Channel("optin.plain")
+    got = []
+    def main(ctx):
+        ctx.declare_channels([dur_ch, plain])
+        if ctx.rank == 0:
+            ctx.fire(1, dur_ch, {"i": 1})
+            ctx.fire(1, plain, {"i": 2})
+        else:
+            ctx.submit_persistent(lambda c, e: got.append(e[0].data["i"]),
+                                  deps=[(ANY, dur_ch)], name="w")
+            ctx.submit_persistent(lambda c, e: got.append(e[0].data["i"]),
+                                  deps=[(ANY, plain)], name="p")
+    with edat.Session(2, workers_per_rank=1, unconsumed="ignore",
+                      timeout=30.0) as s:
+        rt = s.runtime
+        s.run(main)
+        dur = rt._durable
+        assert dur is not None
+        dur.logger.flush()
+        assert dur.log.count(FIRED) == 1      # only the durable channel
+    assert sorted(got) == [1, 2]
+
+
+# -------------------------------------------------- cross-process chaos
+def _report_msg(report):
+    return (f"result={report['result']} expected={report['expected']} "
+            f"pending={report['pending']} replayed={report['replayed']} "
+            f"exitcodes={report['exitcodes']} workdir={report['workdir']}")
+
+
+@pytest.mark.slow
+def test_chaos_survivor_replay(tmp_path):
+    """SIGKILL the process hosting the dawdling rank; survivors absorb
+    the replayed backlog (no replacement) and the result matches the
+    uninterrupted run exactly."""
+    from repro.durable.demo import run_chaos
+    report = run_chaos(ranks=4, procs=2, items=32, kill=2, replace=False,
+                       kill_after=0.3, timeout=90.0,
+                       workdir=str(tmp_path), verbose=False)
+    assert report["ok"], _report_msg(report)
+    assert report["replayed"] >= 1
+    assert not report["rejoined"]
+
+
+@pytest.mark.slow
+def test_chaos_elastic_join(tmp_path):
+    """Same kill, but a replacement process is launched mid-run and
+    elastically joins: it re-hosts the dead ranks, drains the replayed
+    backlog, and the world converges with zero leaked tasks."""
+    from repro.durable.demo import run_chaos
+    report = run_chaos(ranks=4, procs=2, items=32, kill=2, replace=True,
+                       kill_after=0.3, timeout=90.0,
+                       workdir=str(tmp_path), verbose=False)
+    assert report["ok"], _report_msg(report)
+    assert report["replayed"] >= 1
+    assert report["rejoined"], "replacement never completed its splice"
+    # the replacement exits 0 like everyone else
+    assert all(c == 0 for c in report["exitcodes"].values()), \
+        report["exitcodes"]
+
+
+@pytest.mark.slow
+def test_chaos_helpers_drive_elastic_join(tmp_path):
+    """The tests/_chaos.py helpers end-to-end: gate the kill on real
+    progress, launch_replacement + wait_for_join splice a new process
+    into the running world, and the run converges."""
+    from repro.durable.demo import (WorkQueue, expected,
+                                    wait_for_completions)
+    from repro.net.launch import ProcessGroup
+    import pickle
+
+    items, kill = 32, 2
+    db = str(tmp_path / "durable.sqlite")
+    out = str(tmp_path / "result.pkl")
+    prog = WorkQueue(items, stall_rank=kill, stall_s=0.05, out_path=out)
+    pg = ProcessGroup(4, prog, n_procs=2, run_timeout=90.0, elastic=True,
+                      hb_interval=0.1, hb_timeout=1.0, workers_per_rank=1,
+                      unconsumed="ignore",
+                      durable={"path": db, "join_timeout": 15.0})
+    pg.start()
+    assert wait_for_completions(db, rank=kill, timeout=45.0)
+    time.sleep(0.3)
+    pg.kill(kill)
+    ready = launch_replacement(pg, kill, str(tmp_path))
+    wait_for_join(ready, timeout=45.0)
+    pg.wait(check=False)
+    assert all(c == 0 for c in pg.exitcodes().values()), pg.exitcodes()
+    with open(out, "rb") as f:
+        got = pickle.load(f)
+    assert got == expected(items)
+    lg = SqliteLog(db)
+    try:
+        assert lg.pending() == []
+    finally:
+        lg.close()
+
+
+def test_respawn_requires_elastic():
+    from repro.net.launch import ProcessGroup
+    pg = ProcessGroup(2, lambda ctx: None, n_procs=1, run_timeout=30.0)
+    with pytest.raises(RuntimeError, match="elastic"):
+        pg.respawn(0)
+
+
+def test_wait_for_join_times_out(tmp_path):
+    with pytest.raises(TimeoutError):
+        wait_for_join(str(tmp_path / "never"), timeout=0.3)

@@ -68,6 +68,28 @@ def test_admission_backpressure_rule():
     assert analyze(_stats(channels=ch)) == []
 
 
+def test_tasks_replayed_rule():
+    # durable recovery: one finding per (dead rank, channel), naming the
+    # channel, the replayed-event count, and the dead rank
+    stats = _stats()
+    stats["durable"] = {"log": "sqlite", "appends": 120, "batches": 9,
+                        "queue_max": 4,
+                        "replays": [
+                            {"dead_rank": 2, "channel": "wq.work",
+                             "events": 5},
+                            {"dead_rank": 2, "channel": "wq.done",
+                             "events": 1}]}
+    findings = analyze(stats)
+    assert [f.rule for f in findings] == ["tasks-replayed"] * 2
+    work = next(f for f in findings if f.data["eid"] == "wq.work")
+    assert work.data["events"] == 5 and work.data["dead_rank"] == 2
+    assert "'wq.work'" in work.message and "rank 2" in work.message
+    assert "at-least-once" in work.message
+    # durable mode on but no failure: no finding
+    stats["durable"]["replays"] = []
+    assert analyze(stats) == []
+
+
 def test_render_shapes():
     assert "healthy" in render([])
     out = render([Finding("backpressure", "channel 'g' backpressured")])

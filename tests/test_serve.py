@@ -224,3 +224,33 @@ def test_client_sigkill_drains_cleanly(tmp_path):
                                                      cfg.vocab)}
     served_ids = {r["id"] for r in res["records"]}
     assert survivor_ids <= served_ids
+
+
+def test_server_sigkill_clients_surface_rankdied(tmp_path):
+    """SIGKILL the *server* process (rank 0 — also the termination
+    coordinator) once it has admitted its first request.  The clients
+    cannot finish — nobody will ever broadcast terminate — but they must
+    not hang either: each client runtime raises ``RankDiedError`` naming
+    rank 0, and the launcher treats that as an orderly child outcome
+    (a ``rankdied`` report, exit code 0)."""
+    ready = str(tmp_path / "ready")
+    load = LoadSpec(rps=10.0, requests=12, prompt_lens=(4, 8),
+                    max_new_lo=4, max_new_hi=8, seed=4)
+    with edat.Session(3, procs=3, transport="socket", timeout=300,
+                      workers_per_rank=2, unconsumed="ignore",
+                      hb_interval=0.2, hb_timeout=1.5) as s:
+        s.start(edat.deferred(serve_program, arch=ARCH, slots=2,
+                              max_len=MAX_LEN, load=load,
+                              ready_file=ready, ready_after=1))
+        chaos.sigkill_when_ready(s, 0, ready, timeout=120, settle=0.2)
+        s.wait(240, check=False)
+        codes = s.exitcodes()
+        res = s.gather()
+        reports = s._last_pg.child_reports
+    assert codes[0] not in (None, 0)            # the server died by kill
+    assert codes[1] == 0 and codes[2] == 0      # clients: orderly exit
+    assert res is None                          # rank 0 never finalized
+    died = sorted(r for r in reports if r[0] == "rankdied")
+    assert [r[1] for r in died] == [1, 2]       # both clients reported
+    for r in died:
+        assert "rank 0" in r[2] and "termination coordinator" in r[2]
